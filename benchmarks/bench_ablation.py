@@ -1,0 +1,54 @@
+"""Ablation: watermark thresholds and the anti-flap dwell (paper Sec V:
+"experimentally determined to balance energy savings with network
+performance").
+
+  PYTHONPATH=src python -m benchmarks.bench_ablation
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.simulator import SimParams, run_sim
+from repro.core.traffic import TRAFFIC_SPECS
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "ablation.json"
+TICKS = 30_000
+TRACE = "fb_hadoop"
+
+
+def main():
+    import repro.core.constants as C
+    spec = TRAFFIC_SPECS[TRACE]
+    base = run_sim(SimParams(spec=spec, gating_enabled=False), TICKS, 0)
+    rows = []
+
+    def trial(tag, **kw):
+        r = run_sim(SimParams(spec=spec, **kw), TICKS, 0)
+        pen = r["mean_latency_us"] / base["mean_latency_us"] - 1
+        rows.append({"tag": tag, **kw,
+                     "savings": r["switch_energy_savings_frac"],
+                     "penalty": pen})
+        print(f"{tag:28s} savings={r['switch_energy_savings_frac']:.3f} "
+              f"penalty={pen*100:+.1f}%")
+
+    print(f"trace={TRACE}, {TICKS} ticks, baseline latency "
+          f"{base['mean_latency_us']:.2f} us")
+    # paper watermarks
+    trial("hi75/lo22 (paper)")
+    # threshold sensitivity
+    trial("hi50/lo22", hi=0.50)
+    trial("hi90/lo22", hi=0.90)
+    trial("hi75/lo10", lo=0.10)
+    trial("hi75/lo40", lo=0.40)
+
+    # dwell ablation: flapping cost (DESIGN.md deviation note)
+    for dwell in (0, 64, 256, 1024, 4096):
+        trial(f"dwell={dwell}us", dwell=dwell)
+
+    OUT.write_text(json.dumps(rows, indent=1))
+    print(f"written: {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""One benchmark per paper table/figure (deliverable d).
+
+  fig1  power-breakdown series per network design        (Sec II)
+  fig7  traffic-generator CDF fidelity (Pearson r)       (Sec VI-A)
+  fig8  partial network activation breakdown             (Sec VI-B)
+  fig9  transceiver energy savings per trace             (Sec VI-B)
+  fig10 packet latency LC/DC vs always-on                (Sec VI-B)
+  fig11 whole-DC energy savings at 30/50/70% util        (Sec VI-B)
+  ici   beyond-paper: LC/DC on the TPU ICI fabric
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ici_gating
+from repro.core.energy import dc_savings, power_breakdown_series
+from repro.core.topology import all_designs
+from repro.core.traffic import (TARGET_CDFS, TRAFFIC_SPECS,
+                                pearson_vs_target, sample_flow_sizes,
+                                sample_intervals)
+from benchmarks.simcache import get_results
+
+
+def bench_fig1_power_breakdown(report):
+    t0 = time.time()
+    rows = {}
+    for d in all_designs():
+        series = power_breakdown_series(d, util=0.30)
+        name, _, frac = series[-1]
+        rows[d.name] = frac
+    avg_tx = float(np.mean([f["transceivers"] for f in rows.values()]))
+    max_full = float(max(f["transceivers"] + f["phy"] + f["nic"]
+                         for f in rows.values()))
+    report("fig1_power_breakdown", time.time() - t0,
+           f"avg_tx_frac={avg_tx:.3f} (paper ~0.20); "
+           f"max_phy_nic_tx={max_full:.3f} (paper 'up to 0.46')")
+    for k, f in rows.items():
+        report(f"fig1[{k}]", 0.0,
+               f"servers={f['servers']:.3f} tx={f['transceivers']:.3f} "
+               f"nic={f['nic']:.3f} phy={f['phy']:.3f}")
+
+
+def bench_fig7_traffic_cdfs(report):
+    t0 = time.time()
+    rs, ri = [], []
+    for name, spec in TRAFFIC_SPECS.items():
+        sizes = sample_flow_sizes(jax.random.PRNGKey(0), spec, 200_000)
+        iat = sample_intervals(jax.random.PRNGKey(1), spec, 200_000)
+        r_s = pearson_vs_target(np.asarray(sizes), TARGET_CDFS[name]["size"])
+        r_i = pearson_vs_target(np.asarray(iat),
+                                TARGET_CDFS[name]["interval"])
+        rs.append(r_s)
+        ri.append(r_i)
+        report(f"fig7[{name}]", 0.0, f"r_size={r_s:.4f} r_interval={r_i:.4f}")
+    report("fig7_traffic_cdfs", time.time() - t0,
+           f"r_size in [{min(rs):.3f},{max(rs):.3f}] (paper 0.979-0.992); "
+           f"r_interval in [{min(ri):.3f},{max(ri):.3f}] (paper 0.894-0.998)")
+
+
+def bench_fig8_activation(report):
+    t0 = time.time()
+    data = get_results()
+    halves = []
+    for name, r in data["traces"].items():
+        lc = r["lcdc"]
+        halves.append(lc["half_off_frac"])
+        hist = ",".join(f"{x:.2f}" for x in lc["on_frac_hist"])
+        report(f"fig8[{name}]", 0.0,
+               f"on_frac_hist(0-25|25-50|50-75|75-100%)={hist} "
+               f"half_off={lc['half_off_frac']:.2f}")
+    report("fig8_activation", time.time() - t0,
+           f"avg_half_off={np.mean(halves):.3f} (paper: 0.87 avg; "
+           f"Microsoft ~0.5)")
+
+
+def bench_fig9_energy(report):
+    t0 = time.time()
+    data = get_results()
+    saves = []
+    for name, r in data["traces"].items():
+        s = r["lcdc"]["switch_energy_savings_frac"]
+        saves.append(s)
+        report(f"fig9[{name}]", 0.0,
+               f"switch_tier_savings={s:.3f} "
+               f"node_on={r['lcdc']['node_link_on_frac']:.3f}")
+    report("fig9_energy", time.time() - t0,
+           f"avg={np.mean(saves):.3f} max={np.max(saves):.3f} "
+           f"(paper: avg 0.60, max 0.68)")
+
+
+def bench_fig10_latency(report):
+    t0 = time.time()
+    data = get_results()
+    pens = []
+    for name, r in data["traces"].items():
+        pen = (r["lcdc"]["mean_latency_us"]
+               / r["baseline"]["mean_latency_us"] - 1.0)
+        pens.append(pen)
+        report(f"fig10[{name}]", 0.0,
+               f"lcdc={r['lcdc']['mean_latency_us']:.2f}us "
+               f"base={r['baseline']['mean_latency_us']:.2f}us "
+               f"penalty={pen*100:+.1f}%")
+    report("fig10_latency", time.time() - t0,
+           f"avg_penalty={np.mean(pens)*100:+.1f}% (paper: +6%)")
+
+
+def bench_fig11_dc_energy(report):
+    t0 = time.time()
+    data = get_results()
+    # Fig 11 input: the representative transceiver savings. The paper uses
+    # its Fig 9 number (~60% -> on_frac ~0.4); we use our measured
+    # switch-tier savings averaged over traces for the same arithmetic.
+    on = float(np.mean([1.0 - r["lcdc"]["switch_energy_savings_frac"]
+                        for r in data["traces"].values()]))
+    for util, paper in [(0.30, "12%/21-27%"), (0.50, "13%/23%"),
+                        (0.70, "12%/21%")]:
+        res = dc_savings(on, util)["average"]
+        report(f"fig11[util={util:.0%}]", 0.0,
+               f"links_only={res.savings_links_only:.3f} "
+               f"with_phy_nic={res.savings_with_phy_nic:.3f} "
+               f"(paper {paper})")
+    report("fig11_dc_energy", time.time() - t0,
+           f"transceiver_on_frac_input={on:.3f}")
+
+
+def bench_ici_gating(report):
+    t0 = time.time()
+    rows = ici_gating.analyze_all(idle_frac=0.0)
+    if not rows:
+        report("ici_gating", time.time() - t0, "no dry-run artifacts yet")
+        return
+    best = max(rows, key=lambda r: r["scheduled"]["ici_energy_savings"])
+    worst = min(rows, key=lambda r: r["scheduled"]["ici_energy_savings"])
+    avg = np.mean([r["scheduled"]["ici_energy_savings"] for r in rows])
+    for r in rows:
+        report(f"ici[{r['arch']}|{r['shape']}]", 0.0,
+               f"duty={r['collective_duty']:.3f} "
+               f"sched_save={r['scheduled']['ici_energy_savings']:.3f} "
+               f"react_save={r['reactive']['ici_energy_savings']:.3f} "
+               f"react_pen={r['reactive']['latency_penalty']:.3f}")
+    report("ici_gating", time.time() - t0,
+           f"avg_sched_savings={avg:.3f} best={best['arch']}|{best['shape']}"
+           f"={best['scheduled']['ici_energy_savings']:.3f} "
+           f"worst={worst['arch']}|{worst['shape']}"
+           f"={worst['scheduled']['ici_energy_savings']:.3f}")
+    # serving-idle sweep: decode steps are too short to cycle lasers
+    # per-layer (t_layer ~ us vs 11 us on+off), so the serving win comes
+    # from gating across idle gaps between requests (diurnal load).
+    for idle in (0.3, 0.6):
+        rows_i = ici_gating.analyze_all(idle_frac=idle)
+        dec = [r for r in rows_i if r["shape"] in ("decode_32k",
+                                                   "long_500k")]
+        if dec:
+            a = np.mean([r["scheduled"]["ici_energy_savings"] for r in dec])
+            report(f"ici_idle[{idle:.0%}]", 0.0,
+                   f"decode-cell avg sched savings={a:.3f}")
+
+
+ALL = [bench_fig1_power_breakdown, bench_fig7_traffic_cdfs,
+       bench_fig8_activation, bench_fig9_energy, bench_fig10_latency,
+       bench_fig11_dc_energy, bench_ici_gating]

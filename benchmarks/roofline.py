@@ -1,0 +1,163 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) cell
+from the dry-run artifacts, per EXPERIMENTS.md SSRoofline.
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_link_bytes / (chips x 50 GB/s/link)
+
+HLO_FLOPs/bytes come from the dry-run ACCOUNTING pass (unrolled L1/L2
+delta -> exact per-layer totals; scan-over-layers hides trip counts from
+cost_analysis). Two corrections applied and reported:
+
+  * post-SPMD HLO quantities are per-device, so `chips` is already
+    divided out;
+  * rwkv/mamba time recurrences stay inside while loops even in the
+    accounting pass; their FLOPs are added analytically
+    (10*B*T*H*dh^2 wkv / 12*B*T*d_in*N mamba per layer, fwd; x4 for
+    train with full remat).
+
+MODEL_FLOPS = 6*N(_active)*D (train) or 2*N*D (prefill/decode); the
+MODEL/HLO ratio flags remat/redundancy waste. "MFU bound" =
+MODEL_FLOPS-ideal time / max(term): the best MFU any schedule could
+reach given the compiled traffic, assuming perfect overlap.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config
+from repro.core import constants as C
+from repro.models.model import _stack_plan
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+OUT = Path(__file__).resolve().parents[1] / "results" / "roofline.json"
+
+PEAK = C.TPU_PEAK_BF16_FLOPS
+HBM = C.TPU_HBM_BW
+LINK = C.TPU_ICI_LINK_BW
+
+
+def recurrence_flops_per_device(cfg, shape, n_chips=256) -> float:
+    """Analytic FLOPs of scan-hidden recurrences (global / chips)."""
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        T = 1
+    mult = 4.0 if shape.kind == "train" else 1.0   # bwd + remat recompute
+    total = 0.0
+    if cfg.family == "ssm":                        # rwkv wkv
+        H = cfg.d_model // cfg.rwkv_head_dim
+        dh = cfg.rwkv_head_dim
+        total += 10.0 * B * T * H * dh * dh * cfg.n_layers
+    if cfg.mamba is not None:                      # jamba mamba layers
+        d_in = cfg.mamba.expand * cfg.d_model
+        n_mamba = sum(1 for i in range(cfg.n_layers)
+                      if cfg.layer_kind(i) == "mamba")
+        total += 12.0 * B * T * d_in * cfg.mamba.d_state * n_mamba
+    return mult * total / n_chips
+
+
+def model_flops(cfg, shape) -> float:
+    """Spec MODEL_FLOPS: 6*N(_active)*D train, 2*N(_active)*D inference."""
+    D = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    N = cfg.n_active_params()
+    return (6.0 if shape.kind == "train" else 2.0) * N * D
+
+
+def load_cell(arch: str, shape_name: str, mesh="single") -> dict | None:
+    f = RESULTS / f"{arch}__{shape_name}__{mesh}.json"
+    if not f.exists():
+        return None
+    rec = json.loads(f.read_text())
+    return rec if rec.get("ok") else None
+
+
+def cell_roofline(arch: str, shape_name: str, *, n_chips=256,
+                  mesh="single") -> dict | None:
+    rec = load_cell(arch, shape_name, mesh)
+    if rec is None:
+        return None
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    acct = rec.get("acct")
+    if acct:
+        flops = acct["total_flops"]
+        bytes_ = acct["total_bytes"]
+        coll = acct["total_coll_link_bytes"]
+        src = "acct(L2-L1)"
+    else:
+        flops = rec["cost"]["flops"]
+        bytes_ = rec["cost"]["bytes_accessed"]
+        coll = rec["collective_link_bytes"]
+        src = "scan(cost_analysis, per-layer-undercounted)"
+
+    rec_fl = recurrence_flops_per_device(cfg, shape, n_chips)
+    flops += rec_fl
+
+    t_comp = flops / PEAK
+    t_mem = bytes_ / HBM
+    t_coll = coll / LINK
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    t_ideal = mf / n_chips / PEAK
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh,
+        "flops_per_dev": flops, "bytes_per_dev": bytes_,
+        "coll_link_bytes_per_dev": coll,
+        "recurrence_flops_added": rec_fl,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "model_to_hlo_ratio": mf / n_chips / max(flops, 1e-9),
+        "mfu_bound": t_ideal / max(bound, 1e-12),
+        "temp_gib_per_dev": rec["memory"]["temp_size_in_bytes"] / 2 ** 30,
+        "args_gib_per_dev": rec["memory"]["argument_size_in_bytes"] / 2 ** 30,
+        "source": src,
+    }
+
+
+def full_table() -> list[dict]:
+    rows = []
+    for arch in ARCH_IDS:
+        for cell in cells_for(get_config(arch)):
+            if not cell.run:
+                rows.append({"arch": arch, "shape": cell.shape.name,
+                             "skipped": cell.skip_reason})
+                continue
+            r = cell_roofline(arch, cell.shape.name)
+            rows.append(r or {"arch": arch, "shape": cell.shape.name,
+                              "skipped": "dry-run record missing/failed"})
+    return rows
+
+
+def render(rows) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dom':>6s} {'MODEL/HLO':>9s} {'MFUbnd':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} "
+                         f"-- skipped: {r['skipped'][:48]}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+            f"{r['t_collective_s']:9.4f} {r['dominant'][:6]:>6s} "
+            f"{r['model_to_hlo_ratio']:9.3f} {r['mfu_bound']:7.3f}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = full_table()
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps(rows, indent=1))
+    print(render(rows))
+    print(f"\nwritten: {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""The paper's feature, end to end: run the LC/DC data-center simulation
+on one trace, then apply the same gating controller to a TPU training
+step's ICI traffic (from the dry-run artifacts, if present).
+
+  PYTHONPATH=src python examples/energy_proportional_fabric.py
+"""
+from repro.core import ici_gating
+from repro.core.node_model import default_timing
+from repro.core.simulator import SimParams, run_sim
+from repro.core.traffic import TRAFFIC_SPECS
+
+
+def main():
+    print("=== node level (Sec IV-C) ===")
+    t = default_timing()
+    print(f"TCP/IP+NIC budget {t.stack_ns} ns; laser {t.laser_on_ns} ns "
+          f"+ CDR {t.cdr_ns:.1f} ns -> hidden={t.hidden} "
+          f"(slack {t.slack_ns:.0f} ns)")
+
+    print("\n=== data-center fabric (Fig 2 site, fb_hadoop, 30k us) ===")
+    lc = run_sim(SimParams(spec=TRAFFIC_SPECS["fb_hadoop"]), 30_000)
+    base = run_sim(SimParams(spec=TRAFFIC_SPECS["fb_hadoop"],
+                             gating_enabled=False), 30_000)
+    print(f"switch-tier transceiver savings: "
+          f"{lc['switch_energy_savings_frac']:.1%}")
+    print(f"latency: {lc['mean_latency_us']:.2f} us vs "
+          f"{base['mean_latency_us']:.2f} us "
+          f"({lc['mean_latency_us']/base['mean_latency_us']-1:+.1%})")
+    print(f"fraction of time >=half the gated links are off: "
+          f"{lc['half_off_frac']:.0%}")
+
+    print("\n=== TPU ICI fabric (beyond-paper) ===")
+    rows = ici_gating.analyze_all()
+    if not rows:
+        print("(no dry-run artifacts under results/dryrun; run "
+              "`python -m repro.launch.dryrun --all` first)")
+        return
+    for r in rows[:6]:
+        print(f"{r['arch']:22s} {r['shape']:12s} "
+              f"collective duty={r['collective_duty']:.2f} "
+              f"scheduled-gating savings="
+              f"{r['scheduled']['ici_energy_savings']:.1%} "
+              f"(reactive: {r['reactive']['ici_energy_savings']:.1%} at "
+              f"{r['reactive']['latency_penalty']:.0%} stall)")
+    print(f"... ({len(rows)} cells total; see benchmarks/run.py)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: train a tiny LM for 20 steps, then greedy-decode from it.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, batch_at
+from repro.models import model as M
+from repro.optim import make_optimizer
+from repro.train.steps import make_train_step
+
+
+def main():
+    cfg = dataclasses.replace(reduced(get_config("qwen3-0.6b")), vocab=512)
+    data = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8)
+    key = jax.random.PRNGKey(0)
+
+    params = M.init_params(cfg, key)
+    opt_init, _ = make_optimizer(cfg)
+    opt = opt_init(params)
+    step = jax.jit(make_train_step(cfg, peak_lr=3e-3, warmup=5))
+
+    print(f"training {cfg.name}-reduced "
+          f"({sum(p.size for p in jax.tree.leaves(params))/1e6:.1f}M params)")
+    for i in range(20):
+        params, opt, m = step(params, opt, batch_at(data, i),
+                              jnp.asarray(i, jnp.int32))
+        if i % 5 == 0 or i == 19:
+            print(f"  step {i:3d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e}")
+
+    # greedy decode 12 tokens from a prompt
+    prompt = batch_at(data, 10_000)["tokens"][:1, :16]
+    logits, cache = M.prefill(cfg, params, {"tokens": prompt})
+    cache_full = M.init_cache(cfg, 1, 16 + 12, dtype=cfg.dtype)
+
+    def merge(dst, src):
+        if dst.shape == src.shape:
+            return src
+        for ax in range(dst.ndim):
+            if dst.shape[ax] != src.shape[ax]:
+                sl = [slice(None)] * dst.ndim
+                sl[ax] = slice(0, src.shape[ax])
+                return dst.at[tuple(sl)].set(src)
+        return src
+
+    cache = jax.tree.map(merge, cache_full, cache)
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [int(tok[0, 0])]
+    dec = jax.jit(lambda p, c, t, po: M.decode_step(cfg, p, c, t, po))
+    for t in range(16, 16 + 11):
+        logits, cache = dec(params, cache, tok, jnp.full((1,), t, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(int(tok[0, 0]))
+    print("prompt tokens: ", prompt[0].tolist())
+    print("decoded tokens:", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Timing / power constants from the paper (LC/DC, cs.NI 2021).
+
+Sim tick = 1 us. One 1500 B MTU packet on a 10G link ~= 1.2 us, so a 10G
+link serves ~1 pkt/tick and a 40G link 4 pkt/tick.
+"""
+
+TICK_US = 1.0
+
+# --- transceiver timing (Sec IV, conservative MRV SFPFC401 [43]) ---------
+LASER_ON_US = 1.0          # turn-on
+LASER_OFF_US = 10.0        # turn-off (charged at full power: conservative)
+CDR_LOCK_US = 0.000625     # clock-phase caching, 625 ps [5,14,15]
+SWITCH_STAGE_TRIGGER_NS = 5.8   # FPGA: same-cycle trigger (Sec IV-B)
+SWITCH_CTRL_PARSE_NS = 12.8     # 2 cycles @169.32 MHz
+SWITCH_PIPELINE_CYCLES = 7
+FPGA_CLOCK_MHZ = 169.32
+
+# control-message hop + ack + laser + CDR, rounded up to whole ticks.
+# Feasibility (Sec IV): trigger <5.8 ns, ctrl parse 12.8 ns, laser 1 us,
+# clock-phase-caching CDR 625 ps, intra-pod fiber ~0.3 us -> ~2 us.
+STAGE_UP_DELAY_TICKS = 2
+STAGE_OFF_DELAY_TICKS = 10  # 10 us laser-off transition, still charged
+
+# --- node level (Sec IV-C) ------------------------------------------------
+TCP_STACK_NS = (950, 260, 550, 430, 400, 760, 400)   # = 3750 ns total
+SENDMSG_TO_TX_US = 3.2     # measured mean (100k samples, Sec IV-C)
+
+# --- power (Sec II) -------------------------------------------------------
+P_SFP10_W = 1.0            # 10G SFP+ per transceiver
+P_QSFP40_W = 2.4           # 40G QSFP per transceiver
+P_PHY_W = 0.8              # switch PHY per port
+P_NIC_W = 10.0             # server NIC electronics
+P_SWITCH_ASIC_W = 28.0     # switch ASIC + CPU chips
+
+# --- watermarks (Sec V) ---------------------------------------------------
+QUEUE_CAP_PKTS = 20        # output queue capacity (pkts)
+HI_WATERMARK = 0.75        # stage-up threshold (75% buffer utilization)
+LO_WATERMARK = 0.22        # stage-down threshold (22%)
+# anti-flap dwell: a freshly activated stage stays up for at least this
+# long before the low watermark may drain it (keeps an elephant from
+# flapping the stage and re-paying the turn-on queueing repeatedly)
+STAGE_DWELL_TICKS = 1024
+
+# --- TPU v5e targets for the beyond-paper ICI study & roofline ------------
+TPU_PEAK_BF16_FLOPS = 197e12     # per chip
+TPU_HBM_BW = 819e9               # bytes/s per chip
+TPU_ICI_LINK_BW = 50e9           # bytes/s per link (~ one direction)
+TPU_ICI_LINKS_PER_CHIP = 4       # 2D torus (v5e); 3D torus has 6
+ICI_XCVR_W = 2.5                 # modeled per-link optical transceiver power

@@ -1,0 +1,107 @@
+"""LC/DC stage controller: watermark-driven link activation/deactivation.
+
+Pure, vectorized over a leading switch axis so the same controller runs
+the RSW tier (128 switches x 4 uplinks) and the CSW tier (16 x 4), and
+the beyond-paper ICI study (chips x links).
+
+Semantics (Sec III-A):
+  * stage k active -> uplinks [0, k) usable; stage >= 1 always (full
+    connectivity invariant - this is what hides the laser turn-on).
+  * any active queue backlog > hi watermark -> raise stage-up trigger:
+    after STAGE_UP_DELAY ticks (control msg + ack + laser on + CDR) the
+    next link becomes usable.
+  * all active backlogs < lo watermark -> stage-down: the top link stops
+    accepting traffic (drain), and once its queue is empty it powers off
+    after STAGE_OFF_DELAY ticks, during which it is still charged at
+    full power (conservative, Sec VI-B).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+
+
+class GateState(NamedTuple):
+    stage: jnp.ndarray        # (S,) int32 in [1, n_links]
+    up_timer: jnp.ndarray     # (S,) int32, >0 while a link is turning on
+    draining: jnp.ndarray     # (S,) bool, top stage is draining
+    off_timer: jnp.ndarray    # (S,) int32, >0 while top link powers off
+    hold: jnp.ndarray         # (S,) int32 anti-flap dwell after activation
+    # links charged as ON: active + turning-on + draining + turning-off
+    powered: jnp.ndarray      # (S, L) bool
+
+
+def gate_init(n_switches: int, n_links: int) -> GateState:
+    stage = jnp.ones((n_switches,), jnp.int32)
+    powered = jnp.zeros((n_switches, n_links), bool).at[:, 0].set(True)
+    z = jnp.zeros((n_switches,), jnp.int32)
+    return GateState(stage, z, jnp.zeros((n_switches,), bool), z, z,
+                     powered)
+
+
+def active_mask(state: GateState, n_links: int) -> jnp.ndarray:
+    """(S, L) bool: links the scheduler may use this tick."""
+    idx = jnp.arange(n_links)[None, :]
+    usable = idx < state.stage[:, None]
+    # a draining top link no longer accepts new packets
+    top = idx == (state.stage[:, None] - 1)
+    usable &= ~(state.draining[:, None] & top & (state.stage[:, None] > 1))
+    return usable
+
+
+def gate_step(state: GateState, queues: jnp.ndarray,
+              *, cap: float = C.QUEUE_CAP_PKTS,
+              hi: float = C.HI_WATERMARK, lo: float = C.LO_WATERMARK,
+              up_delay: int = C.STAGE_UP_DELAY_TICKS,
+              off_delay: int = C.STAGE_OFF_DELAY_TICKS,
+              dwell: int = C.STAGE_DWELL_TICKS) -> GateState:
+    """One controller tick. queues: (S, L) backlogs in packets."""
+    S, L = queues.shape
+    idx = jnp.arange(L)[None, :]
+    act = idx < state.stage[:, None]
+
+    hi_trig = jnp.any((queues > hi * cap) & act, axis=1)
+    lo_trig = jnp.all(jnp.where(act, queues < lo * cap, True), axis=1)
+
+    stage, up_timer, draining, off_timer, hold = (
+        state.stage, state.up_timer, state.draining, state.off_timer,
+        state.hold)
+    hold = jnp.maximum(hold - 1, 0)
+
+    # --- stage-up: start turn-on unless at max / rising / powering off
+    can_up = hi_trig & (stage < L) & (up_timer == 0) & (off_timer == 0)
+    up_timer = jnp.where(can_up, up_delay, up_timer)
+    # cancel a drain if load returned
+    draining = jnp.where(hi_trig, False, draining)
+    # countdown; on expiry the new link becomes usable
+    fired = up_timer == 1
+    stage = jnp.where(fired, jnp.minimum(stage + 1, L), stage)
+    hold = jnp.where(fired, dwell, hold)     # anti-flap dwell
+    up_timer = jnp.maximum(up_timer - 1, 0)
+
+    # --- stage-down: mark the top link draining (never stage 1)
+    start_drain = lo_trig & (stage > 1) & ~draining & (up_timer == 0) \
+        & (off_timer == 0) & (hold == 0)
+    draining = draining | start_drain
+
+    # drained? (top queue empty) -> drop the stage NOW (link unusable) and
+    # begin the 10us power-off transition (still charged: off_timer)
+    top_q = jnp.take_along_axis(queues, (stage - 1)[:, None],
+                                axis=1)[:, 0]
+    begin_off = draining & (top_q <= 0) & (stage > 1)
+    stage = jnp.where(begin_off, stage - 1, stage)
+    off_timer = jnp.where(begin_off, off_delay, off_timer)
+    draining = jnp.where(begin_off, False, draining)
+    off_timer = jnp.maximum(off_timer - 1, 0)
+
+    # --- power accounting: on, rising, draining or falling => powered
+    powered = idx < stage[:, None]
+    powered |= (up_timer > 0)[:, None] & (idx == stage[:, None])  # rising
+    powered |= (off_timer > 0)[:, None] & (idx == stage[:, None])  # falling
+    powered |= draining[:, None] & (idx == (stage[:, None] - 1))
+
+    return GateState(stage, up_timer, draining, off_timer, hold, powered)

@@ -1,0 +1,473 @@
+"""LC/DC network simulator: 1 us-slotted, fully vectorized, lax.scan-jitted.
+
+Models the Fig 2 Facebook-style site end to end:
+
+  server NICs --(node-gated links)--> RSW --(stage-gated uplinks)--> CSW
+      --(stage-gated 40G uplinks)--> FC --> CSW --> RSW --> server
+
+Edge traffic is stochastic (per-rack flow slots driven by core/traffic.py:
+lognormal sizes, ON/OFF bursts); the aggregation tiers are fluid (float
+packet counts) which preserves the queue dynamics that drive the
+watermark controller while keeping the whole site one dense-array state.
+
+Down-routing honours the stage invariant: packets that land on a CSW/FC
+whose downlink to the destination is gated off migrate over the cluster /
+FC load-balancing rings (the rings exist for exactly this in Fig 2) to
+the always-on stage-1 path, paying ring latency. Connectivity is never
+lost because stage >= 1 everywhere (the paper's core invariant).
+
+Latency is measured with Little's law per queue group (mean delay =
+mean backlog / delivered rate) plus fixed per-hop wire/pipeline/stack
+latencies; the paper reports mean packet delivery latency, which this
+estimates directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constants as C
+from repro.core import gating
+from repro.core.topology import FBSite
+from repro.core.traffic import (TRAFFIC_SPECS, TrafficSpec,
+                                rack_flow_rate_per_tick)
+
+F_SLOTS = 64              # concurrent flow slots per rack
+NODE_IDLE_TICKS = 50      # server-link idle timeout (us)
+RING_CAP = 8              # pkts/tick cluster ring budget
+FC_RING_CAP = 16
+WIRE_HOP_US = 0.5         # fiber + switch pipeline per hop
+STACK_US = 3.75           # TCP/IP + NIC (Sec IV-C)
+
+
+class SimState(NamedTuple):
+    key: jax.Array
+    burst_on: jax.Array        # (R,) bool
+    flow_rem: jax.Array        # (R, F) int32 remaining packets
+    flow_dest: jax.Array       # (R, F) int32 0=rack 1=cluster 2=inter
+    flow_fast: jax.Array       # (R, F) bool: line-rate elephant
+    rsw_q: jax.Array           # (R, L, 2) float [intra, inter]
+    csw_up_q: jax.Array        # (NC, L) float
+    csw_down_q: jax.Array      # (NC, RPC) float
+    fc_down_q: jax.Array       # (NF, NC) float
+    rsw_gate: gating.GateState
+    csw_gate: gating.GateState
+    node_on: jax.Array         # (R,) float servers-links held on
+    acc: dict                  # accumulators
+
+
+@dataclass(frozen=True)
+class SimParams:
+    spec: TrafficSpec
+    site: FBSite = FBSite()
+    gating_enabled: bool = True
+    rate_scale: float = 1.0
+    queue_cap: float = C.QUEUE_CAP_PKTS
+    hi: float = C.HI_WATERMARK
+    lo: float = C.LO_WATERMARK
+    dwell: int = C.STAGE_DWELL_TICKS
+
+
+def _init_state(params: SimParams, key) -> SimState:
+    s = params.site
+    R, L = s.n_racks, s.rsw_uplinks
+    NC, RPC, NF = s.n_csw, s.racks_per_cluster, s.n_fc
+    rsw_gate = gating.gate_init(R, L)
+    csw_gate = gating.gate_init(NC, s.csw_uplinks)
+    if not params.gating_enabled:
+        full = jnp.full((R,), L, jnp.int32)
+        rsw_gate = rsw_gate._replace(
+            stage=full, powered=jnp.ones((R, L), bool))
+        csw_gate = csw_gate._replace(
+            stage=jnp.full((NC,), s.csw_uplinks, jnp.int32),
+            powered=jnp.ones((NC, s.csw_uplinks), bool))
+    acc = {
+        "rsw_backlog": jnp.zeros(()), "rsw_served": jnp.zeros(()),
+        "csw_up_backlog": jnp.zeros(()), "csw_up_served": jnp.zeros(()),
+        "csw_down_backlog": jnp.zeros(()), "csw_down_served": jnp.zeros(()),
+        "fc_backlog": jnp.zeros(()), "fc_served": jnp.zeros(()),
+        "ring_pkts": jnp.zeros(()), "fc_ring_pkts": jnp.zeros(()),
+        "injected": jnp.zeros(()), "intra_rack": jnp.zeros(()),
+        "drops": jnp.zeros(()),
+        "rsw_powered": jnp.zeros(()), "csw_powered": jnp.zeros(()),
+        "node_on": jnp.zeros(()),
+        "half_off_ticks": jnp.zeros(()),
+        "on_frac_hist": jnp.zeros((4,)),   # (0-25,25-50,50-75,75-100]% on
+    }
+    return SimState(
+        key=key,
+        burst_on=jnp.ones((R,), bool),
+        flow_rem=jnp.zeros((R, F_SLOTS), jnp.int32),
+        flow_dest=jnp.zeros((R, F_SLOTS), jnp.int32),
+        flow_fast=jnp.zeros((R, F_SLOTS), bool),
+        rsw_q=jnp.zeros((R, L, 2)),
+        csw_up_q=jnp.zeros((NC, s.csw_uplinks)),
+        csw_down_q=jnp.zeros((NC, RPC)),
+        fc_down_q=jnp.zeros((NF, NC)),
+        rsw_gate=rsw_gate, csw_gate=csw_gate,
+        node_on=jnp.zeros((R,)),
+        acc=acc,
+    )
+
+
+def _spawn_flows(params: SimParams, key, burst_on, flow_rem, flow_dest,
+                 flow_fast):
+    """Per-rack flow arrivals: Bernoulli spawn into the first free slot."""
+    spec = params.spec
+    R = params.site.n_racks
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    # ON/OFF burst Markov
+    stay_on = jax.random.uniform(k1, (R,)) > spec.p_on_off
+    wake = jax.random.uniform(k2, (R,)) < spec.p_off_on
+    burst_on = jnp.where(burst_on, stay_on, wake)
+
+    p_spawn = jnp.minimum(
+        rack_flow_rate_per_tick(spec, params.site.servers_per_rack)
+        * params.rate_scale, 1.0)
+    spawn = jax.random.bernoulli(k3, p_spawn, (R,)) & burst_on
+
+    ks, kd = jax.random.split(k4)
+    # lognormal mixture sizes -> packets (1250 B per packet)
+    km1, km2, km3 = jax.random.split(ks, 3)
+    pick = jax.random.bernoulli(km1, spec.size_w, (R,))
+    z1 = jax.random.normal(km2, (R,))
+    z2 = jax.random.normal(km3, (R,))
+    size_b = jnp.where(pick, jnp.exp(spec.size_mu1 + spec.size_s1 * z1),
+                       jnp.exp(spec.size_mu2 + spec.size_s2 * z2))
+    size_p = jnp.maximum(jnp.ceil(size_b / 1250.0), 1.0).astype(jnp.int32)
+
+    u = jax.random.uniform(kd, (R,))
+    dest = jnp.where(u < spec.p_intra_rack, 0,
+                     jnp.where(u < spec.p_intra_rack + spec.p_intra_cluster,
+                               1, 2)).astype(jnp.int32)
+
+    free = flow_rem == 0
+    first_free = jnp.argmax(free, axis=1)               # (R,)
+    has_free = jnp.any(free, axis=1)
+    do = spawn & has_free
+    rows = jnp.arange(R)
+    flow_rem = flow_rem.at[rows, first_free].add(
+        jnp.where(do, size_p, 0))
+    flow_dest = flow_dest.at[rows, first_free].set(
+        jnp.where(do, dest, flow_dest[rows, first_free]))
+    fast = size_p >= spec.elephant_pkts
+    flow_fast = flow_fast.at[rows, first_free].set(
+        jnp.where(do, fast, flow_fast[rows, first_free]))
+    return burst_on, flow_rem, flow_dest, flow_fast
+
+
+def make_sim_step(params: SimParams):
+    s = params.site
+    R, L = s.n_racks, s.rsw_uplinks
+    NC, RPC, NF = s.n_csw, s.racks_per_cluster, s.n_fc
+    CPC = s.csw_per_cluster
+    n_clusters = s.n_clusters
+
+    def step(state: SimState, _):
+        acc = dict(state.acc)
+        key, k_spawn, k_pace = jax.random.split(state.key, 3)
+
+        # 1. traffic edge ------------------------------------------------
+        burst_on, flow_rem, flow_dest, flow_fast = _spawn_flows(
+            params, k_spawn, state.burst_on, state.flow_rem,
+            state.flow_dest, state.flow_fast)
+        active = flow_rem > 0                                   # (R,F)
+        # paced emission: mice trickle below line rate (boosted during
+        # bursts); elephants transmit at line rate -- overlapping
+        # elephants are what push queues over the high watermark.
+        pace_eff = jnp.minimum(
+            params.spec.pace * jnp.where(burst_on,
+                                         params.spec.burst_pace_boost, 1.0),
+            1.0)[:, None]
+        pace_flow = jnp.where(flow_fast,
+                              params.spec.elephant_pace, pace_eff)
+        emit = active & (jax.random.uniform(k_pace, active.shape)
+                         < pace_flow)
+        n_holding = jnp.sum(active, axis=1).astype(jnp.float32)  # (R,)
+        by_dest = jnp.stack(
+            [jnp.sum(emit & (flow_dest == d), axis=1) for d in (0, 1, 2)],
+            axis=1).astype(jnp.float32)                          # (R,3)
+        flow_rem = jnp.maximum(flow_rem - emit.astype(jnp.int32), 0)
+        acc["injected"] += jnp.sum(by_dest[:, 1:])
+        acc["intra_rack"] += jnp.sum(by_dest[:, 0])
+
+        # 2. RSW enqueue: min-backlog active uplink ----------------------
+        rsw_q = state.rsw_q
+        usable = gating.active_mask(state.rsw_gate, L)           # (R,L)
+        q_tot = jnp.sum(rsw_q, axis=2)
+        masked = jnp.where(usable, q_tot, jnp.inf)
+        pick = jnp.argmin(masked, axis=1)                        # (R,)
+        rows = jnp.arange(R)
+        add = by_dest[:, 1:]                                     # (R,2)
+        room = jnp.maximum(params.queue_cap - q_tot[rows, pick], 0.0)
+        scale = jnp.minimum(1.0, room / jnp.maximum(add.sum(1), 1e-9))
+        acc["drops"] += jnp.sum(add.sum(1) * (1 - scale))
+        rsw_q = rsw_q.at[rows, pick].add(add * scale[:, None])
+
+        # 3. RSW serve 1 pkt/tick per powered-active uplink --------------
+        srv_mask = usable | (  # a draining link still drains its queue
+            (jnp.arange(L)[None, :] == state.rsw_gate.stage[:, None] - 1)
+            & state.rsw_gate.draining[:, None])
+        q_tot = jnp.sum(rsw_q, axis=2)
+        serve = jnp.minimum(q_tot, 1.0) * srv_mask               # (R,L)
+        frac = serve / jnp.maximum(q_tot, 1e-9)
+        served_split = rsw_q * frac[..., None]                   # (R,L,2)
+        rsw_q = rsw_q - served_split
+        acc["rsw_backlog"] += jnp.sum(q_tot)
+        acc["rsw_served"] += jnp.sum(serve)
+
+        # uplink l of rack r lands on CSW (cluster(r), l)
+        srv_rc = served_split.reshape(n_clusters, RPC, L, 2)
+        to_csw = jnp.sum(srv_rc, axis=1)                         # (ncl,L,2)
+        intra_in = to_csw[..., 0].reshape(NC)                    # (NC,)
+        inter_in = to_csw[..., 1].reshape(NC)
+
+        # Stage-aware down-plane weights (the per-stage CAM tables of
+        # Sec III-B): traffic for rack r rides plane c with weight
+        # active(r,c)/stage(r); dest racks are uniform within the cluster.
+        rsw_stage_f = state.rsw_gate.stage.astype(jnp.float32)
+        plane_w = (jnp.arange(L)[None, :] < state.rsw_gate.stage[:, None]) \
+            / rsw_stage_f[:, None]                               # (R,L)
+        plane_w_c = plane_w.reshape(n_clusters, RPC, L)
+
+        # 4. CSW: intra-cluster traffic -> down queues. A packet for rack
+        # r arriving UP at csw c may have to cross to plane c' active for
+        # r; within a cluster that crossing is the CSW ring. We charge the
+        # ring for the mismatch between arrival plane and dest plane.
+        intra_cl = jnp.sum(to_csw[..., 0], axis=1)               # (ncl,)
+        dest_share = intra_cl[:, None, None] / RPC * \
+            plane_w_c.transpose(0, 2, 1)                         # (ncl,L,RPC)
+        csw_down_q = state.csw_down_q + dest_share.reshape(NC, RPC)
+        # ring charge: fraction of intra traffic whose up-plane != down-plane
+        up_share = to_csw[..., 0] / jnp.maximum(intra_cl[:, None], 1e-9)
+        mean_down = jnp.mean(plane_w_c, axis=1)                  # (ncl,L)
+        same_plane = jnp.sum(jnp.minimum(up_share, mean_down), axis=1)
+        acc["ring_pkts"] += jnp.sum(intra_cl * (1.0 - same_plane))
+
+        # inter-cluster -> CSW uplinks (min-backlog among active stages)
+        csw_usable = gating.active_mask(state.csw_gate, s.csw_uplinks)
+        cmask = jnp.where(csw_usable, state.csw_up_q, jnp.inf)
+        cpick = jnp.argmin(cmask, axis=1)                        # (NC,)
+        crows = jnp.arange(NC)
+        croom = jnp.maximum(params.queue_cap
+                            - state.csw_up_q[crows, cpick], 0.0)
+        cscale = jnp.minimum(1.0, croom / jnp.maximum(inter_in, 1e-9))
+        acc["drops"] += jnp.sum(inter_in * (1 - cscale))
+        csw_up_q = state.csw_up_q.at[crows, cpick].add(inter_in * cscale)
+
+        # 5. CSW uplink serve (40G: 4 pkt/tick) -> FC --------------------
+        csrv_mask = csw_usable | (
+            (jnp.arange(s.csw_uplinks)[None, :]
+             == state.csw_gate.stage[:, None] - 1)
+            & state.csw_gate.draining[:, None])
+        cserve = jnp.minimum(csw_up_q, 4.0) * csrv_mask          # (NC,L)
+        csw_up_q = csw_up_q - cserve
+        acc["csw_up_backlog"] += jnp.sum(state.csw_up_q)
+        acc["csw_up_served"] += jnp.sum(cserve)
+
+        # uplink f of csw c lands on FC f. The FC routes traffic for
+        # cluster k down an ACTIVE (f, c') plane of that cluster (per-stage
+        # CAMs): weight by the cluster's csw-uplink activity and by the
+        # dest rack's active planes.
+        fc_in = jnp.sum(cserve, axis=0)                          # (NF,)
+        csw_stage_f = state.csw_gate.stage.astype(jnp.float32)
+        fc_w = (jnp.arange(NF)[None, :]
+                < state.csw_gate.stage[:, None]) / csw_stage_f[:, None]
+        # csw c's share of its cluster's down traffic = how much of the
+        # cluster's racks ride plane (c mod CPC)
+        csw_share = jnp.mean(plane_w_c, axis=1).reshape(NC)      # (NC,)
+        # total inter-cluster down traffic splits uniformly over clusters
+        down_cl = jnp.sum(fc_in) / n_clusters                    # scalar
+        fc_down_add = down_cl * csw_share[None, :] * fc_w.T      # (NF,NC)
+        fc_down_q = state.fc_down_q + fc_down_add
+
+        # 6. FC down serve: link (f,c) active iff csw stage[c] > f; any
+        #    residual on an inactive plane (stage just dropped) rides the
+        #    FC ring to the always-on f=0 plane.
+        fc_active = (jnp.arange(NF)[:, None]
+                     < state.csw_gate.stage[None, :])            # (NF,NC)
+        fserve = jnp.minimum(fc_down_q, 4.0) * fc_active
+        fc_down_q = fc_down_q - fserve
+        stranded = jnp.where(~fc_active, fc_down_q, 0.0)
+        mig = jnp.minimum(jnp.sum(stranded), FC_RING_CAP)
+        mfrac = mig / jnp.maximum(jnp.sum(stranded), 1e-9)
+        fc_down_q = fc_down_q - stranded * mfrac
+        fc_down_q = fc_down_q.at[0, :].add(
+            jnp.sum(stranded * mfrac, axis=0))
+        acc["fc_ring_pkts"] += mig
+        acc["fc_backlog"] += jnp.sum(state.fc_down_q)
+        acc["fc_served"] += jnp.sum(fserve)
+
+        # FC-served packets land on csw c -> its down queues, weighted by
+        # each rack's active planes (stage-aware, as above)
+        per_csw_down = jnp.sum(fserve, axis=0)                   # (NC,)
+        pw_cr = plane_w_c.transpose(0, 2, 1).reshape(NC, RPC)    # (NC,RPC)
+        pw_norm = pw_cr / jnp.maximum(
+            jnp.sum(pw_cr, axis=1, keepdims=True), 1e-9)
+        csw_down_q = csw_down_q + per_csw_down[:, None] * pw_norm
+
+        # 7. CSW down serve: link (r, c_in_cluster) active iff rsw
+        #    stage[r] > c; stranded traffic rides the cluster ring to c=0.
+        rsw_stage = state.rsw_gate.stage.reshape(n_clusters, RPC)
+        cidx = jnp.arange(CPC)[None, :, None]                    # cluster pos
+        down_act = (cidx < rsw_stage[:, None, :])                # (ncl,CPC,RPC)
+        dq = csw_down_q.reshape(n_clusters, CPC, RPC)
+        dserve = jnp.minimum(dq, 1.0) * down_act
+        dq = dq - dserve
+        stranded_d = jnp.where(~down_act, dq, 0.0)               # (ncl,CPC,RPC)
+        tot_str = jnp.sum(stranded_d, axis=(1, 2))               # (ncl,)
+        migd = jnp.minimum(tot_str, float(RING_CAP))
+        dfrac = (migd / jnp.maximum(tot_str, 1e-9))[:, None, None]
+        moved = stranded_d * dfrac
+        dq = dq - moved
+        dq = dq.at[:, 0, :].add(jnp.sum(moved, axis=1))
+        csw_down_q = dq.reshape(NC, RPC)
+        acc["ring_pkts"] += jnp.sum(migd)
+        acc["csw_down_backlog"] += jnp.sum(state.csw_down_q)
+        delivered_r = jnp.sum(dserve, axis=1).reshape(R)         # (R,)
+        acc["csw_down_served"] += jnp.sum(dserve)
+
+        # 8. node-level link gating (OS intercept: zero latency cost).
+        # A server link is held on while its server has active flows (tx)
+        # or receives traffic, with an idle timeout.
+        need = jnp.minimum(n_holding + delivered_r,
+                           float(s.servers_per_rack))
+        node_on = jnp.maximum(
+            need, state.node_on - s.servers_per_rack / NODE_IDLE_TICKS)
+        acc["node_on"] += jnp.sum(node_on)
+
+        # 9. watermark controllers. Per Sec III-B the backlog monitor
+        # watches ALL output queues of a switch: the RSW trigger combines
+        # its uplink queues with the CSW down-queue pressure on each
+        # plane-to-rack link, and the CSW trigger combines its FC uplink
+        # queues with the FC down-queue pressure per plane (a saturated
+        # 40G down plane must open the next stage).
+        rsw_gate, csw_gate = state.rsw_gate, state.csw_gate
+        if params.gating_enabled:
+            down_rc = csw_down_q.reshape(n_clusters, CPC, RPC) \
+                .transpose(0, 2, 1).reshape(R, CPC)          # (R, planes)
+            rsw_gate = gating.gate_step(
+                rsw_gate, jnp.maximum(jnp.sum(rsw_q, axis=2), down_rc),
+                cap=params.queue_cap, hi=params.hi, lo=params.lo,
+                dwell=params.dwell)
+            csw_gate = gating.gate_step(
+                csw_gate, jnp.maximum(csw_up_q, fc_down_q.T),
+                cap=params.queue_cap, hi=params.hi, lo=params.lo,
+                dwell=params.dwell)
+
+        rsw_pow = jnp.sum(rsw_gate.powered)
+        csw_pow = jnp.sum(csw_gate.powered)
+        acc["rsw_powered"] += rsw_pow
+        acc["csw_powered"] += csw_pow
+        frac_on = (rsw_pow + csw_pow) / float(R * L + NC * s.csw_uplinks)
+        acc["half_off_ticks"] += (frac_on <= 0.5)
+        bucket = jnp.clip((frac_on * 4).astype(jnp.int32), 0, 3)
+        acc["on_frac_hist"] = acc["on_frac_hist"].at[bucket].add(1.0)
+
+        new_state = SimState(key, burst_on, flow_rem, flow_dest, flow_fast,
+                             rsw_q, csw_up_q, csw_down_q, fc_down_q,
+                             rsw_gate, csw_gate, node_on, acc)
+        return new_state, None
+
+    return step
+
+
+def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
+    """Run the site for n_ticks us; returns aggregate metrics."""
+    state = _init_state(params, jax.random.PRNGKey(seed))
+    step = make_sim_step(params)
+
+    @jax.jit
+    def go(state):
+        out, _ = jax.lax.scan(step, state, None, length=n_ticks)
+        return out
+
+    final = go(state)
+    a = {k: np.asarray(v) for k, v in final.acc.items()}
+    s = params.site
+    T = float(n_ticks)
+
+    # ---- latency (Little's law per tier + fixed costs) -----------------
+    def wait(backlog, served):
+        return float(backlog / max(served, 1e-9))
+
+    inj = max(float(a["injected"]), 1e-9)
+    frac_inter = float(a["csw_up_served"]) / inj if inj else 0.0
+    mean_wait = (
+        wait(a["rsw_backlog"], a["rsw_served"])
+        + wait(a["csw_down_backlog"], a["csw_down_served"])
+        + frac_inter * (wait(a["csw_up_backlog"], a["csw_up_served"])
+                        + wait(a["fc_backlog"], a["fc_served"])))
+    ring_frac = float(a["ring_pkts"] + a["fc_ring_pkts"]) / inj
+    hops = 4.0 + 2.0 * frac_inter + ring_frac
+    mean_latency_us = STACK_US + hops * WIRE_HOP_US + mean_wait
+
+    # ---- energy ---------------------------------------------------------
+    pw = s.transceiver_power_w()
+    rsw_on = float(a["rsw_powered"]) / (T * s.n_rsw_csw_links)
+    csw_on = float(a["csw_powered"]) / (T * s.n_csw_fc_links)
+    node_on = float(a["node_on"]) / (T * s.n_servers)
+    if not params.gating_enabled:
+        node_on = rsw_on = csw_on = 1.0
+
+    # Fig 9 metric: the stage-gated switch-tier transceivers (RSW-CSW and
+    # CSW-FC). Stage 1 never gates, so 75% is the ceiling.
+    switch_w = pw["rsw_csw"] * rsw_on + pw["csw_fc"] * csw_on
+    switch_total = pw["rsw_csw"] + pw["csw_fc"]
+    switch_savings = 1.0 - switch_w / switch_total
+
+    # All transceivers (feeds the Fig 11 whole-DC estimate): server links
+    # gated by the node-level OS mechanism + switch tiers + always-on rings.
+    power_w = pw["server"] * node_on + switch_w + pw["ring"]
+    total_w = s.total_transceiver_power_w()
+
+    return {
+        "trace": params.spec.name,
+        "gating": params.gating_enabled,
+        "ticks": n_ticks,
+        "mean_latency_us": mean_latency_us,
+        "mean_wait_us": float(mean_wait),
+        "wait_rsw_us": wait(a["rsw_backlog"], a["rsw_served"]),
+        "wait_csw_up_us": wait(a["csw_up_backlog"], a["csw_up_served"]),
+        "wait_csw_down_us": wait(a["csw_down_backlog"],
+                                 a["csw_down_served"]),
+        "wait_fc_us": wait(a["fc_backlog"], a["fc_served"]),
+        "injected_pkts": float(a["injected"]),
+        "delivered_pkts": float(a["csw_down_served"]),
+        "drop_frac": float(a["drops"]) / inj,
+        "ring_frac": ring_frac,
+        "rsw_link_on_frac": rsw_on,
+        "csw_link_on_frac": csw_on,
+        "node_link_on_frac": node_on,
+        "switch_energy_savings_frac": float(switch_savings),
+        "transceiver_power_w": float(power_w),
+        "all_transceiver_savings_frac": float(1.0 - power_w / total_w),
+        "half_off_frac": float(a["half_off_ticks"]) / T,
+        "on_frac_hist": (a["on_frac_hist"] / T).tolist(),
+        "offered_load_pkts_per_tick": inj / T,
+    }
+
+
+def compare_traces(n_ticks: int = 200_000, seed: int = 0,
+                   traces=None) -> dict:
+    """LC/DC vs always-on across every modeled trace (Figs 8-10)."""
+    out = {}
+    for name in (traces or TRAFFIC_SPECS):
+        spec = TRAFFIC_SPECS[name]
+        lc = run_sim(SimParams(spec=spec, gating_enabled=True),
+                     n_ticks, seed)
+        base = run_sim(SimParams(spec=spec, gating_enabled=False),
+                       n_ticks, seed)
+        out[name] = {
+            "lcdc": lc, "baseline": base,
+            "switch_energy_savings": lc["switch_energy_savings_frac"],
+            "all_transceiver_savings": lc["all_transceiver_savings_frac"],
+            "latency_penalty":
+                lc["mean_latency_us"] / base["mean_latency_us"] - 1.0,
+        }
+    return out

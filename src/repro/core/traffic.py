@@ -1,0 +1,170 @@
+"""Data-center traffic generator (paper Sec V / Fig 6-7).
+
+Models the flow-size and flow-inter-arrival CDFs of
+  * Facebook web / cache / Hadoop machines (Roy et al., SIGCOMM'15 [48])
+  * Microsoft (VL2 [31] and IMC'09 [36])
+  * a university data center (Benson et al., IMC'10 [8])
+
+Each trace is a ``TrafficSpec``: a 2-component lognormal mixture for flow
+sizes (bytes), a lognormal for inter-arrival times (us, per server), an
+ON/OFF burst modulation, and a destination-locality split. ``TARGET_CDFS``
+hold anchor points digitized from the published figures; the paper
+validates its generator by the Pearson r between generated and published
+CDFs (r = 0.979-0.992 size, 0.894-0.998 interval) and we reproduce that
+validation in benchmarks/bench_traffic_cdf.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TrafficSpec:
+    name: str
+    # flow size: lognormal mixture  w*LN(mu1,s1) + (1-w)*LN(mu2,s2)  [bytes]
+    size_w: float
+    size_mu1: float
+    size_s1: float
+    size_mu2: float
+    size_s2: float
+    # inter-arrival per server [us]: lognormal
+    iat_mu: float
+    iat_s: float
+    # ON/OFF burst modulation (per-rack Markov, per-tick transition probs)
+    p_on_off: float = 0.002     # leave ON
+    p_off_on: float = 0.004     # leave OFF
+    # destination split
+    p_intra_rack: float = 0.3
+    p_intra_cluster: float = 0.45   # rest = inter-cluster
+    # per-flow packet pacing: emit probability per tick (1.0 = line rate).
+    # Real DC flows rarely run at NIC line rate; pacing keeps server links
+    # occupied (node-gating realism) without saturating the uplinks.
+    pace: float = 0.05
+    # pace multiplier while a rack bursts (shuffle/scatter phases)
+    burst_pace_boost: float = 1.0
+    # flows >= elephant_pkts packets transmit near line rate: overlapping
+    # elephants are what push a queue over the high watermark (hadoop
+    # shuffle / cache-warm behaviour). Mice keep `pace`. elephant_pace is
+    # slightly below 1.0 so a lone elephant still lets the queue drain.
+    elephant_pkts: int = 64
+    elephant_pace: float = 0.95
+
+
+# mu/s in ln(bytes). exp(mu) = median flow size.
+TRAFFIC_SPECS: dict[str, TrafficSpec] = {
+    # Hadoop: small flows dominate (median <1 kB, Roy Fig.5), heavy rack
+    # locality; frequent arrivals (median ~2 ms/server).
+    "fb_hadoop": TrafficSpec("fb_hadoop", 0.75, np.log(600), 0.9,
+                             np.log(100e3), 1.9, np.log(2000), 1.2,
+                             p_on_off=0.003, p_off_on=0.0012,
+                             p_intra_rack=0.45, p_intra_cluster=0.40,
+                             pace=0.03),
+    # Web servers: small request/response flows, cluster-heavy traffic.
+    "fb_web": TrafficSpec("fb_web", 0.7, np.log(2e3), 1.0,
+                          np.log(120e3), 1.6, np.log(3500), 1.1,
+                          p_on_off=0.0025, p_off_on=0.0012,
+                          p_intra_rack=0.15, p_intra_cluster=0.25,
+                          pace=0.04),
+    # Cache followers: medium flows, some MB-scale, mostly inter-cluster.
+    "fb_cache": TrafficSpec("fb_cache", 0.55, np.log(6e3), 1.1,
+                            np.log(500e3), 1.6, np.log(15000), 1.3,
+                            p_on_off=0.002, p_off_on=0.0015,
+                            p_intra_rack=0.1, p_intra_cluster=0.45,
+                            pace=0.04),
+    # Microsoft VL2/IMC09: >80 % of flows < 100 kB with a heavy tail;
+    # the most demanding load in Fig 8/9.
+    "microsoft": TrafficSpec("microsoft", 0.6, np.log(4e3), 1.3,
+                             np.log(400e3), 1.8, np.log(6500), 1.5,
+                             p_on_off=0.0015, p_off_on=0.002,
+                             p_intra_rack=0.2, p_intra_cluster=0.35,
+                             pace=0.04),
+    # University DC (Benson IMC'10): low utilization, very bursty.
+    "university": TrafficSpec("university", 0.8, np.log(1500), 1.2,
+                              np.log(200e3), 1.9, np.log(9000), 1.8,
+                              p_on_off=0.005, p_off_on=0.001,
+                              p_intra_rack=0.35, p_intra_cluster=0.35,
+                              pace=0.02),
+}
+
+
+# Anchor points (value, cdf) digitized from the published measurements the
+# paper targets. Sizes in bytes, intervals in us (per server).
+TARGET_CDFS: dict[str, dict[str, list]] = {
+    "fb_hadoop": {
+        "size": [(100, 0.05), (300, 0.22), (1e3, 0.62), (3e3, 0.78),
+                 (1e4, 0.86), (1e5, 0.94), (1e6, 0.985), (1e7, 0.998)],
+        "interval": [(100, 0.03), (500, 0.18), (1e3, 0.34), (2e3, 0.52),
+                     (5e3, 0.75), (1e4, 0.87), (1e5, 0.985)],
+    },
+    "fb_web": {
+        "size": [(300, 0.06), (1e3, 0.32), (3e3, 0.60), (1e4, 0.76),
+                 (5e4, 0.87), (1e5, 0.92), (1e6, 0.982), (1e7, 0.997)],
+        "interval": [(300, 0.04), (1e3, 0.22), (3e3, 0.46), (6e3, 0.66),
+                     (2e4, 0.88), (1e5, 0.98)],
+    },
+    "fb_cache": {
+        "size": [(500, 0.04), (2e3, 0.25), (6e3, 0.47), (3e4, 0.63),
+                 (1e5, 0.74), (5e5, 0.87), (2e6, 0.95), (2e7, 0.995)],
+        "interval": [(500, 0.05), (2e3, 0.25), (6e3, 0.50), (2e4, 0.74),
+                     (1e5, 0.93), (1e6, 0.995)],
+    },
+    "microsoft": {
+        "size": [(100, 0.04), (1e3, 0.30), (4e3, 0.52), (2e4, 0.68),
+                 (1e5, 0.79), (1e6, 0.91), (1e7, 0.97), (1e8, 0.995)],
+        "interval": [(50, 0.05), (200, 0.20), (1e3, 0.47), (5e3, 0.76),
+                     (3e4, 0.93), (3e5, 0.992)],
+    },
+    "university": {
+        "size": [(100, 0.06), (500, 0.28), (1500, 0.52), (5e3, 0.70),
+                 (3e4, 0.84), (2e5, 0.93), (2e6, 0.98), (2e7, 0.996)],
+        "interval": [(500, 0.03), (3e3, 0.2), (1.2e4, 0.5), (5e4, 0.77),
+                     (3e5, 0.95), (3e6, 0.997)],
+    },
+}
+
+
+def sample_flow_sizes(key, spec: TrafficSpec, n: int) -> jnp.ndarray:
+    """Draw n flow sizes [bytes] from the mixture."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    pick = jax.random.bernoulli(k1, spec.size_w, (n,))
+    z = jax.random.normal(k2, (n,))
+    s1 = jnp.exp(spec.size_mu1 + spec.size_s1 * z)
+    z2 = jax.random.normal(k3, (n,))
+    s2 = jnp.exp(spec.size_mu2 + spec.size_s2 * z2)
+    return jnp.where(pick, s1, s2)
+
+
+def sample_intervals(key, spec: TrafficSpec, n: int) -> jnp.ndarray:
+    """Draw n inter-arrival times [us per server]."""
+    z = jax.random.normal(key, (n,))
+    return jnp.exp(spec.iat_mu + spec.iat_s * z)
+
+
+def empirical_cdf_at(samples: np.ndarray, xs: np.ndarray) -> np.ndarray:
+    s = np.sort(np.asarray(samples))
+    return np.searchsorted(s, xs, side="right") / len(s)
+
+
+def pearson_vs_target(samples, anchors) -> float:
+    xs = np.array([a[0] for a in anchors], dtype=float)
+    target = np.array([a[1] for a in anchors], dtype=float)
+    got = empirical_cdf_at(np.asarray(samples, dtype=float), xs)
+    gm, tm = got.mean(), target.mean()
+    num = np.sum((got - gm) * (target - tm))
+    den = np.sqrt(np.sum((got - gm) ** 2) * np.sum((target - tm) ** 2))
+    return float(num / den) if den > 0 else 0.0
+
+
+def rack_flow_rate_per_tick(spec: TrafficSpec, servers_per_rack: int = 48,
+                            duty: float | None = None) -> float:
+    """Expected new flows per rack per 1 us tick while the rack is ON."""
+    mean_iat_us = float(np.exp(spec.iat_mu + spec.iat_s ** 2 / 2))
+    rate = servers_per_rack / mean_iat_us
+    if duty is None:
+        duty = spec.p_off_on / (spec.p_off_on + spec.p_on_off)
+    # compensate for OFF periods so the long-run rate matches the IAT dist
+    return rate / max(duty, 1e-6)

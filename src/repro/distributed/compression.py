@@ -1,0 +1,43 @@
+"""Gradient compression for the DP all-reduce: int8 quantization with
+error feedback (residual carried across steps so compression error does
+not accumulate -- EF-SGD style). Opt-in wrapper around the grad tree.
+
+At 1000+ nodes the gradient all-reduce of a dense model is the largest
+inter-pod collective; 4x compression cuts the 'pod' axis traffic
+proportionally (the ICI-gating study reads this directly from the HLO
+of the compressed variant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_state_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef_state):
+    """error-feedback compress: g' = Q(g + e); e' = (g + e) - g'."""
+    def one(g, e):
+        t = g.astype(jnp.float32) + e
+        q, s = quantize_int8(t)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), t - deq
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    ef = treedef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat, ef)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

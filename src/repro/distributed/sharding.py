@@ -1,0 +1,215 @@
+"""Declarative sharding rules: params / optimizer state / caches / batches.
+
+Rules are path-based over the params pytree produced by ``model.init_params``
+(obtained via ``jax.eval_shape`` so no memory is touched). Policy:
+
+  * TP   : d_ff, attention heads, vocab (head), rwkv/mamba inner dims over
+           the 'model' axis.
+  * FSDP : the complementary dim of every large matrix over 'data'
+           (all-gathered at use; XLA inserts the collectives).
+  * EP   : expert dims handled by moe.moe_param_specs (shard_map).
+  * DP   : batch over ('pod','data') (the pod axis extends data).
+  * SP   : decode caches shard KV-seq over data when batch is unshardable
+           (long_500k with global_batch=1).
+
+MLA attention matrices are kept model-replicated (minicpm3's 40 heads do
+not divide a 16-way axis; the model is 4B params — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_lib
+from repro.models.moe import DistContext, moe_param_specs
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def _leaf_spec(cfg, dist: DistContext, names: list[str], ndim: int) -> P:
+    ma = dist.model_axis
+    fsdp = "data" if (cfg.fsdp and cfg.zero >= 3) else None
+    name = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    moe_specs = moe_param_specs(cfg, dist) if cfg.n_experts else {}
+
+    if name == "embed":
+        if cfg.tie_embeddings:
+            # the table doubles as the LM head: vocab over model so logits
+            # come out vocab-sharded with no resharding of the (tokens,
+            # vocab) tensor; FSDP on d_model.
+            return P(ma, fsdp)
+        return P(fsdp, ma)
+    if name == "head":
+        return P(ma, fsdp)
+    if parent == "moe":
+        return moe_specs[name]
+    if parent == "attn":
+        if cfg.attn_type == "mla":
+            return P(fsdp) if ndim >= 2 else P()
+        if name in ("wq",):
+            return P(fsdp, ma)
+        if name in ("wk", "wv"):
+            # kv heads replicated over model (n_kv < model-axis in general)
+            return P(fsdp, None)
+        if name == "wo":
+            return P(ma, fsdp)
+        return P()                      # q_norm / k_norm
+    if parent == "mlp":
+        if name in ("w_gate", "w_up"):
+            return P(fsdp, ma)
+        return P(ma, fsdp)              # w_down
+    if parent == "rwkv":
+        if name in ("wr", "wk", "wv", "wg", "cm_wk"):
+            return P(fsdp, ma)
+        if name in ("wo", "cm_wv"):
+            return P(ma, fsdp)
+        if name == "cm_wr":
+            return P(fsdp, None)
+        return P()                      # loras, maa, u, gn_w, w0
+    if parent == "mamba":
+        if name == "in_proj":
+            return P(fsdp, ma)
+        if name == "out_proj":
+            return P(ma, fsdp)
+        if name == "conv_w":
+            return P(None, ma)
+        if name in ("conv_b", "D", "dt_bias"):
+            return P(ma)
+        if name == "x_proj":
+            return P(ma, None)
+        if name == "dt_proj":
+            return P(None, ma)
+        if name == "A_log":
+            return P(ma, None)
+        return P()
+    return P()                          # norms and other vectors
+
+
+def opt_extra_shard(cfg, dist: DistContext, spec, shp):
+    """ZeRO-2: shard optimizer moments over 'data' on the first dim that
+    is unsharded and divisible (params stay replicated over data)."""
+    if cfg.zero != 2:
+        return spec
+    parts = list(spec) + [None] * (len(shp.shape) - len(spec))
+    for i, (ax, n) in enumerate(zip(parts, shp.shape)):
+        if ax is None and n % dist.data_size == 0 and n > 1:
+            parts[i] = "data" if dist.data_size ==                 dist.mesh.shape["data"] else dist.data_axes
+            return P(*parts)
+    return spec
+
+
+def param_specs(cfg, dist: DistContext):
+    """PartitionSpec pytree matching init_params(cfg)."""
+    shapes = jax.eval_shape(
+        lambda k: model_lib.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        spec = _leaf_spec(cfg, dist, names, leaf.ndim)
+        if names[0] == "stack":          # stacked layer dim is unsharded
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, shapes), shapes
+
+
+def batch_specs(cfg, shape, dist: DistContext):
+    """PartitionSpecs for the input batch of one shape cell."""
+    da = dist.data_axes if len(dist.data_axes) > 1 else "data"
+    from repro.configs.base import input_specs
+    specs = input_specs(cfg, shape)
+    B = shape.global_batch
+    b_ax = da if B % dist.data_size == 0 else None
+
+    out = {}
+    for k, v in specs.items():
+        out[k] = P(b_ax, *([None] * (v.ndim - 1)))
+    return out, specs
+
+
+def cache_specs(cfg, shape, dist: DistContext):
+    """PartitionSpecs for the decode cache of one shape cell.
+
+    batch over data when divisible; otherwise KV-seq over data (SP).
+    rwkv/mamba states shard their head/inner dim over 'model'.
+    """
+    da = dist.data_axes if len(dist.data_axes) > 1 else "data"
+    ma = dist.model_axis
+    B = shape.global_batch
+    batch_ok = B % dist.data_size == 0
+    b_ax = da if batch_ok else None
+
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, B, shape.seq_len))
+
+    def _seq_axes(S, kv_sharded):
+        """Shard the KV-seq dim over every axis not already used: the data
+        axes when batch doesn't shard, the model axis when kv-heads don't
+        (flash-decoding-style partial softmax; GSPMD inserts the psum)."""
+        axes = []
+        if not batch_ok:
+            axes.extend(da if isinstance(da, tuple) else (da,))
+        if not kv_sharded:
+            axes.append(ma)
+        n = 1
+        for a in axes:
+            n *= dist.mesh.shape[a]
+        if axes and S % n == 0:
+            return tuple(axes)
+        return None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        stacked = names[0] == "stack"
+        lead = (None,) if stacked else ()
+        if name == "pos_offset":
+            return P(b_ax)
+        if name in ("k", "v"):           # (B, S, Hkv, dh)
+            S, Hkv = leaf.shape[-3], leaf.shape[-2]
+            kv_ok = Hkv % dist.model_size == 0
+            kv_ax = ma if kv_ok else None
+            return P(*lead, b_ax, _seq_axes(S, kv_ok), kv_ax, None)
+        if name in ("c_kv", "k_rope"):   # (B, S, r) - no head dim to shard
+            S = leaf.shape[-2]
+            return P(*lead, b_ax, _seq_axes(S, False), None)
+        if name == "wkv":                # (B, H, dh, dh)
+            H = leaf.shape[-3]
+            h_ax = ma if H % dist.model_size == 0 else None
+            return P(*lead, b_ax, h_ax, None, None)
+        if name in ("att_shift", "cm_shift"):   # (B, d)
+            return P(*lead, b_ax, None)
+        if name == "conv":               # (B, d_conv-1, d_in)
+            return P(*lead, b_ax, None, ma)
+        if name == "h":                  # (B, d_in, N)
+            return P(*lead, b_ax, ma, None)
+        return P(*lead, *([None] * (leaf.ndim - len(lead))))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes), cache_shapes
+
+
+def logits_spec(cfg, dist: DistContext, global_batch: int | None = None):
+    da = dist.data_axes if len(dist.data_axes) > 1 else "data"
+    b_ax = da if (global_batch is None
+                  or global_batch % dist.data_size == 0) else None
+    v_ax = dist.model_axis if cfg.padded_vocab % dist.model_size == 0 \
+        else None
+    return P(b_ax, v_ax)
+
+
+def to_shardings(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

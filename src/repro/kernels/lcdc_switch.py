@@ -1,0 +1,91 @@
+"""LC/DC switch datapath step as a Pallas kernel.
+
+The TPU-native analogue of the paper's FPGA pipeline (Sec III-B): for a
+tile of switches, one tick of
+  (1) min-backlog output-queue selection over the stage-enabled ports
+      (the per-stage CAM lookup + weighted scheduler),
+  (2) arrival enqueue with capacity clamp (drop counting),
+  (3) 1-pkt/port service over enabled ports,
+  (4) high/low watermark trigger generation (the backlog monitor).
+
+All switches in a tile advance in one VPU-wide vector step; the sim's
+pure-jnp path (ref.switch_step) is the oracle and the CPU execution
+path; on TPU ops.switch_step dispatches here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+
+def _kernel(q_ref, stage_ref, arr_ref, qo_ref, hi_ref, lo_ref, drop_ref, *,
+            cap: float, hi: float, lo: float, n_links: int):
+    q = q_ref[...]                                  # (bs, L)
+    stage = stage_ref[...]                          # (bs, 1) int32
+    arr = arr_ref[...]                              # (bs, 1)
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, q.shape, 1)
+    act = idx < stage
+
+    # (1) min-backlog selection among active ports
+    masked = jnp.where(act, q, BIG)
+    mn = jnp.min(masked, axis=1, keepdims=True)
+    pick = (masked == mn)
+    # break ties toward the lowest index
+    first = jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
+    pick &= first
+
+    # (2) enqueue with capacity clamp
+    room = jnp.maximum(cap - mn, 0.0)
+    add = jnp.minimum(arr, room)
+    drop_ref[...] = arr - add
+    q = q + pick.astype(q.dtype) * add
+
+    # (3) serve one packet per active port
+    q = jnp.maximum(q - act.astype(q.dtype), 0.0)
+    qo_ref[...] = q
+
+    # (4) watermark triggers
+    hi_ref[...] = jnp.any((q > hi * cap) & act, axis=1,
+                          keepdims=True).astype(jnp.int32)
+    lo_ref[...] = jnp.all(jnp.where(act, q < lo * cap, True), axis=1,
+                          keepdims=True).astype(jnp.int32)
+
+
+def switch_step(queues, stage, arrivals, *, cap=20.0, hi=0.75, lo=0.22,
+                block_s=128, interpret=True):
+    """queues: (S, L) f32; stage: (S,) int32; arrivals: (S,) f32.
+    Returns (new_queues, hi_trig (S,), lo_trig (S,), dropped (S,))."""
+    S, L = queues.shape
+    bs = min(block_s, S)
+    assert S % bs == 0
+    kern = functools.partial(_kernel, cap=float(cap), hi=float(hi),
+                             lo=float(lo), n_links=L)
+    qo, hi_t, lo_t, drop = pl.pallas_call(
+        kern,
+        grid=(S // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, L), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, L), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, L), queues.dtype),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+            jax.ShapeDtypeStruct((S, 1), queues.dtype),
+        ],
+        interpret=interpret,
+    )(queues, stage[:, None], arrivals[:, None])
+    return qo, hi_t[:, 0], lo_t[:, 0], drop[:, 0]

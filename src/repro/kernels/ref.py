@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+* attention_ref     - reuses the model's chunked online-softmax attention
+                      (repro/models/attention.py), itself validated against
+                      a naive softmax in the tests.
+* attention_naive   - O(T*S) direct softmax (small shapes only).
+* wkv_ref           - sequential RWKV-6 recurrence (repro/models/rwkv6.py).
+* switch_step_ref   - one LC/DC switch tick, identical semantics to
+                      kernels/lcdc_switch.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention as attention_ref  # noqa
+from repro.models.rwkv6 import wkv_scan as wkv_ref  # noqa
+
+BIG = 1e30
+
+
+def attention_naive(q, k, v, *, causal=True, swa_window=0):
+    B, T, H, dq = q.shape
+    S = k.shape[1]
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dq ** -0.5
+    qp = jnp.arange(T)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if swa_window:
+        mask &= (qp - kp) < swa_window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", p, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def switch_step_ref(queues, stage, arrivals, *, cap=20.0, hi=0.75, lo=0.22):
+    S, L = queues.shape
+    idx = jnp.arange(L)[None, :]
+    act = idx < stage[:, None]
+    masked = jnp.where(act, queues, BIG)
+    mn = jnp.min(masked, axis=1, keepdims=True)
+    pick = masked == mn
+    pick &= jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
+    room = jnp.maximum(cap - mn[:, 0], 0.0)
+    add = jnp.minimum(arrivals, room)
+    dropped = arrivals - add
+    q = queues + pick.astype(queues.dtype) * add[:, None]
+    q = jnp.maximum(q - act.astype(q.dtype), 0.0)
+    hi_t = jnp.any((q > hi * cap) & act, axis=1).astype(jnp.int32)
+    lo_t = jnp.all(jnp.where(act, q < lo * cap, True), axis=1) \
+        .astype(jnp.int32)
+    return q, hi_t, lo_t, dropped

@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell this produces, per mesh:
+  * the scanned-stack compile -> memory_analysis (peak bytes/device proof)
+  * cost_analysis flops/bytes (per-layer-undercounted inside scans; see
+    the accounting pass)
+  * an ACCOUNTING pass: the same step unrolled with n_scan=1 and n_scan=2
+    layers (periods) and single-chunk attention; the L2-L1 delta gives
+    exact per-layer HLO FLOPs / bytes / collective-bytes, from which
+    full-depth totals are reconstructed:
+        total = L1 + (n_scan - 1) * (L2 - L1)
+    (wkv/mamba time-recurrences remain while-loops even unrolled; their
+    FLOPs are added analytically in benchmarks/roofline.py.)
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both] [--skip-acct]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, cells_for, get_config,
+                           input_specs)
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis as hla
+from repro.launch.mesh import dist_for, make_production_mesh
+from repro.models import model as model_lib
+from repro.optim import adafactor_init, adamw_init
+from repro.train.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _opt_specs(cfg, p_specs, p_shapes, dist=None):
+    """Optimizer-state PartitionSpecs mirroring the param specs
+    (ZeRO-2 shards the moments over data even when params are not)."""
+    from jax.sharding import PartitionSpec as P
+    if dist is not None and cfg.zero == 2 and cfg.optimizer == "adamw":
+        m = jax.tree.map(
+            lambda sp, sh: shd.opt_extra_shard(cfg, dist, sp, sh),
+            p_specs, p_shapes, is_leaf=lambda x: isinstance(x, P))
+        return {"step": P(), "m": m, "v": m}
+    if cfg.optimizer == "adafactor":
+        def fac(spec, shp):
+            if shp.ndim >= 2:
+                return {"vr": P(*spec[:len(spec) - 1] if len(spec) else ()),
+                        "vc": P(*(list(spec[:-2]) + [spec[-1]])
+                                if len(spec) >= 2 else spec)}
+            return {"v": spec}
+        v = jax.tree.map(fac, p_specs, p_shapes,
+                         is_leaf=lambda x: isinstance(x, P))
+        return {"step": P(), "v": v}
+    return {"step": P(), "m": p_specs, "v": p_specs}
+
+
+def _opt_shapes(cfg, p_shapes):
+    init = adafactor_init if cfg.optimizer == "adafactor" else adamw_init
+    return jax.eval_shape(init, p_shapes)
+
+
+def lower_cell(cfg, shape, mesh, *, donate=True):
+    """Lower + compile one cell on one mesh. Returns (compiled, lowered)."""
+    from jax.sharding import PartitionSpec as P
+    dist = dist_for(mesh)
+    p_specs, p_shapes = shd.param_specs(cfg, dist)
+    b_specs, b_shapes = shd.batch_specs(cfg, shape, dist)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            o_specs = _opt_specs(cfg, p_specs, p_shapes, dist)
+            o_shapes = _opt_shapes(cfg, p_shapes)
+            fn = make_train_step(cfg, dist)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(p_specs, o_specs, b_specs, P()),
+                out_shardings=(p_specs, o_specs, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jfn.lower(p_shapes, o_shapes, b_shapes,
+                                jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(cfg, dist)
+            c_specs, _ = shd.cache_specs(cfg, shape, dist)
+            jfn = jax.jit(fn, in_shardings=(p_specs, b_specs),
+                          out_shardings=(shd.logits_spec(
+                              cfg, dist, shape.global_batch), c_specs))
+            lowered = jfn.lower(p_shapes, b_shapes)
+        else:                                          # decode
+            fn = make_decode_step(cfg, dist)
+            c_specs, c_shapes = shd.cache_specs(cfg, shape, dist)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(p_specs, c_specs, b_specs["token"],
+                              b_specs["pos"]),
+                out_shardings=(shd.logits_spec(
+                    cfg, dist, shape.global_batch), c_specs),
+                donate_argnums=(1,) if donate else ())
+            lowered = jfn.lower(p_shapes, c_shapes, b_shapes["token"],
+                                b_shapes["pos"])
+        compiled = lowered.compile()
+    return compiled, lowered
+
+
+def _acct_cfg(cfg, shape, n_periods):
+    """Config for the FLOP-accounting pass: n_periods periods, unrolled,
+    single-chunk attention."""
+    _, _, period = model_lib._stack_plan(cfg)
+    n_layers = cfg.first_dense + n_periods * period
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, unroll=True,
+        attn_chunk=max(shape.seq_len, 1),
+        # MoE capacity depends only on tokens/experts; unchanged.
+    )
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             *, skip_acct=False, verbose=True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "n_devices": mesh.size, "ok": False}
+    t0 = time.time()
+    try:
+        compiled, lowered = lower_cell(cfg, shape, mesh)
+        rec["memory"] = hla.memory_stats(compiled)
+        rec["cost"] = hla.cost_stats(compiled)
+        coll = hla.parse_collectives(compiled.as_text())
+        rec["collectives"] = coll.by_op()
+        rec["collective_link_bytes"] = coll.total_link_bytes
+        rec["ok"] = True
+        del compiled, lowered
+    except Exception as e:  # noqa: BLE001 - record the failure verbatim
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    if rec["ok"] and not skip_acct and mesh_kind == "single":
+        try:
+            acct = {}
+            for n in (1, 2):
+                c2, _ = lower_cell(_acct_cfg(cfg, shape, n), shape, mesh,
+                                   donate=False)
+                acct[n] = {
+                    "cost": hla.cost_stats(c2),
+                    "coll_link_bytes":
+                        hla.parse_collectives(c2.as_text()).total_link_bytes,
+                }
+                del c2
+            _, n_scan, _ = model_lib._stack_plan(cfg)
+            d_fl = acct[2]["cost"]["flops"] - acct[1]["cost"]["flops"]
+            d_by = (acct[2]["cost"]["bytes_accessed"]
+                    - acct[1]["cost"]["bytes_accessed"])
+            d_cl = (acct[2]["coll_link_bytes"] - acct[1]["coll_link_bytes"])
+            rec["acct"] = {
+                "L1": acct[1], "L2": acct[2],
+                "per_layer_flops": d_fl,
+                "per_layer_bytes": d_by,
+                "per_layer_coll_link_bytes": d_cl,
+                "total_flops": acct[1]["cost"]["flops"] + (n_scan - 1) * d_fl,
+                "total_bytes": acct[1]["cost"]["bytes_accessed"]
+                + (n_scan - 1) * d_by,
+                "total_coll_link_bytes":
+                    acct[1]["coll_link_bytes"] + (n_scan - 1) * d_cl,
+            }
+        except Exception as e:  # noqa: BLE001
+            rec["acct_error"] = f"{type(e).__name__}: {e}"
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"{arch}__{shape_name}__{mesh_kind}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    if verbose:
+        mem = rec.get("memory", {})
+        print(f"[{rec['compile_s']:7.1f}s] {arch:22s} {shape_name:12s} "
+              f"{mesh_kind:6s} ok={rec['ok']} "
+              f"temp/dev={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"args/dev={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB",
+              flush=True)
+        if not rec["ok"]:
+            print("  ERROR:", rec["error"], flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-acct", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+
+    total = ok = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for cell in cells_for(cfg):
+            if args.shape and cell.shape.name != args.shape:
+                continue
+            if not cell.run:
+                print(f"[  skip ] {arch:22s} {cell.shape.name:12s} "
+                      f"-- {cell.skip_reason}", flush=True)
+                continue
+            for mk in meshes:
+                out = RESULTS / f"{arch}__{cell.shape.name}__{mk}.json"
+                if args.skip_existing and out.exists() and \
+                        json.loads(out.read_text()).get("ok"):
+                    continue
+                rec = run_cell(arch, cell.shape.name, mk,
+                               skip_acct=args.skip_acct)
+                total += 1
+                ok += rec["ok"]
+    print(f"dry-run complete: {ok}/{total} cells compiled", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh factory.
+
+Single pod: 16 x 16 = 256 chips ('data', 'model').
+Multi-pod:  2 x 16 x 16 = 512 chips ('pod', 'data', 'model'); the 'pod'
+axis extends data parallelism (gradient all-reduce crosses the inter-pod
+links; the ICI-gating study in core/ici_gating.py consumes exactly that
+traffic split).
+
+Defined as functions so importing this module never touches jax device
+state (dryrun.py must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.models.moe import DistContext
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def dist_for(mesh) -> DistContext:
+    axes = mesh.axis_names
+    data_axes = ("pod", "data") if "pod" in axes else ("data",)
+    return DistContext(mesh=mesh, data_axes=data_axes, model_axis="model")

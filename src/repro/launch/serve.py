@@ -1,0 +1,63 @@
+"""Serving launcher: batched prefill + lock-step decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
+      --batch 8 --prompt-len 32 --gen 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, P = args.batch, args.prompt_len
+    max_len = P + args.gen
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab)
+
+    logits, cache = jax.jit(lambda p, b: M.prefill(cfg, p, b))(
+        params, {"tokens": prompts})
+    full = M.init_cache(cfg, B, max_len, dtype=cfg.dtype)
+
+    def merge(dst, src):
+        if dst.shape == src.shape:
+            return src
+        for ax in range(dst.ndim):
+            if dst.shape[ax] != src.shape[ax]:
+                sl = [slice(None)] * dst.ndim
+                sl[ax] = slice(0, src.shape[ax])
+                return dst.at[tuple(sl)].set(src)
+        return src
+
+    cache = jax.tree.map(merge, full, cache)
+    dec = jax.jit(lambda p, c, t, po: M.decode_step(cfg, p, c, t, po))
+    tok = jnp.argmax(logits, -1)[:, None]
+    t0 = time.perf_counter()
+    n = 0
+    for t in range(P, max_len - 1):
+        logits, cache = dec(params, cache, tok,
+                            jnp.full((B,), t, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None]
+        n += B
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: {n} tokens in {dt:.2f}s -> {n/dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

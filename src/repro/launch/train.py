@@ -1,0 +1,64 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b \
+      --steps 1000 --ckpt-dir /ckpts/qwen3-8b [--reduced]
+
+On a real TPU fleet this process runs per host (jax.distributed
+initializes from the cluster env); in this CPU container use --reduced
+for a smoke-scale run. XLA flags enable the latency-hiding scheduler so
+collectives overlap compute on TPU.
+"""
+import os
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_tpu_enable_latency_hiding_scheduler=true")
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import dist_for, make_production_mesh
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU smoke)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+        dist = None
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        dist = dist_for(mesh)
+
+    data = DataConfig(vocab=cfg.vocab,
+                      seq_len=args.seq_len or (64 if args.reduced else 4096),
+                      global_batch=args.global_batch
+                      or (8 if args.reduced else 256))
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, total_steps=args.steps,
+                         ckpt_every=args.ckpt_every, peak_lr=args.lr)
+    trainer = Trainer(cfg=cfg, tcfg=tcfg, data=data, dist=dist)
+    state, start = trainer.restore_or_init()
+    print(f"training {cfg.name} from step {start} on "
+          f"{jax.device_count()} device(s)")
+    trainer.run(state, start)
+    print("done; losses:",
+          [round(m["loss"], 4) for m in trainer.metrics_log[-5:]])
+
+
+if __name__ == "__main__":
+    main()

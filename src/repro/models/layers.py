@@ -1,0 +1,83 @@
+"""Common model primitives: norms, RoPE, SwiGLU MLP, initializers.
+
+All modules are pure functions over parameter dicts; parameters for scanned
+layer stacks are stacked on a leading layer axis by the model assembler.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(d_rot: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, d) with d even; positions: (..., T) int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., T, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_init(key, d_model, d_ff, dtype, variant="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": init_dense(k2, d_model, d_ff, dtype),
+        "w_down": init_dense(k3, d_ff, d_model, dtype),
+    }
+    if variant == "swiglu":
+        p["w_gate"] = init_dense(k1, d_model, d_ff, dtype)
+    return p
+
+
+def swiglu_apply(p, x):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:                      # 2-matrix GELU MLP (GPTBigCode / granite)
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def embed_init(key, vocab, d_model, dtype):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def unembed(x, w):  # w: (vocab, d) -> logits in fp32 (bf16 MXU accum f32)
+    return jnp.einsum("btd,vd->btv", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+def cross_entropy(logits, targets, mask=None):
+    """Mean CE over (optionally masked) positions. logits fp32 (B,T,V).
+
+    The gold logit is extracted with an iota-compare reduction rather than
+    take_along_axis: a gather over a vocab-sharded logits tensor makes
+    GSPMD all-gather the full (tokens, vocab) array, while the masked
+    reduction stays sharded and fuses.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,114 @@
+"""Mamba (S6) selective-state-space block for the Jamba hybrid.
+
+Faithful to the S6 recurrence: input-dependent (dt, B, C), A = -exp(A_log),
+ZOH discretization dA = exp(dt*A), dB = dt*B. The time scan is a single
+``lax.scan`` carrying h: (B, d_inner, d_state); per-step tensors are
+sliced inside the body so the (B, T, d_inner, d_state) discretized tensor
+is never materialized (the memory trick of the paper's hardware-aware
+kernel, expressed at the XLA level).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+
+def mamba_dims(cfg):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, mc.d_state, mc.d_conv
+
+
+def mamba_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, dt_rank, d_state, d_conv = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                         (d_in, d_state))
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_in)) *
+                   d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": init_dense(ks[2], d_in, dt_rank + 2 * d_state, dtype),
+        "dt_proj": init_dense(ks[3], dt_rank, d_in, dtype),
+        "dt_bias": jnp.zeros((d_in,), dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_dense(ks[4], d_in, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,T,d_in); w: (d_conv, d_in) depthwise causal conv."""
+    d_conv = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(d_conv))
+    return out + b
+
+
+def ssm_scan(u, dt, Bs, Cs, A, D, h0):
+    """Selective scan. u, dt: (B,T,d_in); Bs, Cs: (B,T,d_state);
+    A: (d_in, d_state); h0: (B, d_in, d_state). Returns (y, hT)."""
+    uf = u.astype(jnp.float32).transpose(1, 0, 2)
+    dtf = dt.astype(jnp.float32).transpose(1, 0, 2)
+    Bf = Bs.astype(jnp.float32).transpose(1, 0, 2)
+    Cf = Cs.astype(jnp.float32).transpose(1, 0, 2)
+
+    def step(h, inp):
+        ut, dtt, bt, ct = inp
+        dA = jnp.exp(dtt[..., None] * A)                     # (B,d_in,N)
+        dBu = (dtt * ut)[..., None] * bt[:, None, :]         # (B,d_in,N)
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, ct) + D * ut
+        return h, y
+
+    hT, y = jax.lax.scan(step, h0.astype(jnp.float32), (uf, dtf, Bf, Cf))
+    return y.transpose(1, 0, 2).astype(u.dtype), hT
+
+
+def mamba_forward(p, cfg, x, state=None):
+    """x: (B,T,d). state: None (fresh) or dict(conv (B,d_conv-1,d_in),
+    h (B,d_in,d_state)) for segment continuation. Returns (out, new state).
+    """
+    B, T, _ = x.shape
+    d_in, dt_rank, d_state, d_conv = mamba_dims(cfg)
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    if state is not None:
+        ctx = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+        conv_in = ctx[:, -(T + d_conv - 1):, :]
+        pad_ctx = conv_in
+        out = sum(pad_ctx[:, i:i + T, :] * p["conv_w"][i]
+                  for i in range(d_conv))
+        xs_c = jax.nn.silu(out + p["conv_b"])
+        new_conv = ctx[:, -(d_conv - 1):, :]
+        h0 = state["h"]
+    else:
+        xs_c = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]))
+        new_conv = jnp.concatenate(
+            [jnp.zeros((B, d_conv - 1, d_in), xs.dtype), xs],
+            axis=1)[:, -(d_conv - 1):, :]
+        h0 = jnp.zeros((B, d_in, d_state), jnp.float32)
+
+    proj = xs_c @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    Bs = proj[..., dt_rank:dt_rank + d_state]
+    Cs = proj[..., dt_rank + d_state:]
+    A = -jnp.exp(p["A_log"])
+
+    y, hT = ssm_scan(xs_c, dt, Bs, Cs, A, p["D"], h0)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": new_conv.astype(jnp.float32), "h": hT}
+
+
+def mamba_state_init(cfg, batch):
+    d_in, _, d_state, d_conv = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_in), jnp.float32),
+        "h": jnp.zeros((batch, d_in, d_state), jnp.float32),
+    }

@@ -1,0 +1,364 @@
+"""Model assembler: init / train-loss / prefill / decode for every family.
+
+Layer stacks are scanned (`lax.scan` over stacked params) so the HLO stays
+compact at 61-88 layers; heterogeneous archs scan over their repeating
+period (Jamba: 8-sublayer period x 4). Remat wraps the scanned body.
+
+Entry points (all pure, jit/pjit-able):
+    init_params(cfg, key)            -> params pytree
+    train_loss(cfg, params, batch)   -> (loss, metrics)
+    prefill(cfg, params, batch)      -> (last_logits, cache)
+    decode_step(cfg, params, cache, token, pos) -> (logits, cache)
+    init_cache(cfg, batch, cache_len)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rw
+from repro.models.layers import (cross_entropy, embed_init, rms_norm,
+                                 swiglu_apply, swiglu_init, unembed)
+from repro.models.moe import DistContext
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg, kind, ffn, dtype):
+    """One transformer-ish layer: mixer + FFN (+ norms)."""
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["attn"] = attn.attn_init(k1, cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = mb.mamba_init(k1, cfg, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = rw.rwkv_init(k1, cfg, dtype)
+    if kind != "rwkv":                       # rwkv carries its own channel mix
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        if ffn == "moe":
+            p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype,
+                                   cfg.mlp_variant)
+    else:
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _layer_apply(cfg, p, x, *, positions, dist, kernel_fns, kind, ffn,
+                 cache=None, pos=None, want_cache=False):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    kf = (kernel_fns or {})
+    new_cache = {}
+    if kind == "attn":
+        if cache is not None and pos is not None:          # decode
+            if cfg.attn_type == "mla":
+                out, new_cache = attn.mla_decode(p["attn"], cfg, h, cache, pos)
+            elif cfg.decode_sp and dist is not None and dist.mesh is not None:
+                out, new_cache = attn.gqa_decode_sp(p["attn"], cfg, h, cache,
+                                                    pos, dist)
+            else:
+                out, new_cache = attn.gqa_decode(p["attn"], cfg, h, cache, pos)
+        else:
+            fwd = attn.mla_forward if cfg.attn_type == "mla" \
+                else attn.gqa_forward
+            out, kv = fwd(p["attn"], cfg, h, positions=positions,
+                          kernel_fn=kf.get("attention"))
+            if want_cache:
+                if cfg.attn_type == "mla":
+                    new_cache = {"c_kv": kv[0], "k_rope": kv[1]}
+                else:
+                    k, v = kv
+                    if cfg.swa_window and k.shape[1] > cfg.swa_window:
+                        # roll the tail into a window-sized cache aligned so
+                        # slot (pos % window) matches gqa_decode's writes
+                        T = k.shape[1]
+                        W = cfg.swa_window
+                        shift = T % W
+                        k, v = k[:, -W:], v[:, -W:]
+                        k = jnp.roll(k, shift, axis=1)
+                        v = jnp.roll(v, shift, axis=1)
+                    new_cache = {"k": k, "v": v}
+        x = x + out
+    elif kind == "mamba":
+        out, state = mb.mamba_forward(p["mamba"], cfg, h, state=cache)
+        new_cache = state if (want_cache or cache is not None) else {}
+        x = x + out
+    elif kind == "rwkv":
+        st = cache or {"att_shift": jnp.zeros_like(h[:, 0]),
+                       "wkv": jnp.zeros((h.shape[0], cfg.d_model //
+                                         cfg.rwkv_head_dim,
+                                         cfg.rwkv_head_dim,
+                                         cfg.rwkv_head_dim), jnp.float32),
+                       "cm_shift": jnp.zeros_like(h[:, 0])}
+        out, att_shift, wkv = rw.time_mix(p["rwkv"], cfg, h, st["att_shift"],
+                                          st["wkv"], kernel_fn=kf.get("wkv"))
+        x = x + out
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        out2, cm_shift = rw.channel_mix(p["rwkv"], h2, st["cm_shift"])
+        x = x + out2
+        if want_cache or cache is not None:
+            new_cache = {"att_shift": att_shift, "wkv": wkv,
+                         "cm_shift": cm_shift}
+        return x, new_cache, aux
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if ffn == "moe":
+        out2, aux = moe_mod.moe_apply(p["moe"], cfg, h2, dist)
+    else:
+        out2 = swiglu_apply(p["mlp"], h2)
+    return x + out2, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack structure
+# ---------------------------------------------------------------------------
+
+def _stack_plan(cfg):
+    """Returns (n_prefix, n_scan, period). The stack is `n_prefix` explicit
+    layers followed by a scan over `n_scan` copies of `period` sublayers."""
+    if cfg.mamba is not None:                      # hybrid: scan over periods
+        assert cfg.n_layers % cfg.attn_period == 0
+        return 0, cfg.n_layers // cfg.attn_period, cfg.attn_period
+    if cfg.first_dense:
+        return cfg.first_dense, cfg.n_layers - cfg.first_dense, 1
+    return 0, cfg.n_layers, 1
+
+
+def _kinds_for_period(cfg, n_prefix, period):
+    """(kind, ffn) of each sublayer inside the scanned period."""
+    return [(cfg.layer_kind(n_prefix + i), cfg.ffn_kind(n_prefix + i))
+            for i in range(period)]
+
+
+def init_params(cfg, key):
+    dtype = cfg.dtype
+    n_prefix, n_scan, period = _stack_plan(cfg)
+    kinds = _kinds_for_period(cfg, n_prefix, period)
+    k_emb, k_head, k_pre, k_stack = jax.random.split(key, 4)
+
+    params: dict[str, Any] = {
+        "embed": embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(k_head, cfg.padded_vocab, cfg.d_model,
+                                    dtype)
+    for i in range(n_prefix):
+        params[f"prefix{i}"] = _layer_init(
+            jax.random.fold_in(k_pre, i), cfg, cfg.layer_kind(i),
+            cfg.ffn_kind(i), dtype)
+
+    def one_period(k):
+        ks = jax.random.split(k, period)
+        return {f"sub{i}": _layer_init(ks[i], cfg, kinds[i][0], kinds[i][1],
+                                       dtype)
+                for i in range(period)}
+
+    params["stack"] = jax.vmap(one_period)(jax.random.split(k_stack, n_scan))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def _sublayer_cache(cfg, kind, batch, cache_len, dtype):
+    if kind == "attn":
+        S = min(cache_len, cfg.swa_window) if cfg.swa_window else cache_len
+        if cfg.attn_type == "mla":
+            m = cfg.mla
+            return {"c_kv": jnp.zeros((batch, S, m.kv_lora_rank), dtype),
+                    "k_rope": jnp.zeros((batch, S, m.qk_rope_head_dim),
+                                        dtype)}
+        return {"k": jnp.zeros((batch, S, cfg.n_kv, cfg.d_head), dtype),
+                "v": jnp.zeros((batch, S, cfg.n_kv, cfg.d_head), dtype)}
+    if kind == "mamba":
+        return mb.mamba_state_init(cfg, batch)
+    if kind == "rwkv":
+        return rw.rwkv_state_init(cfg, batch, dtype)
+    return {}
+
+
+def init_cache(cfg, batch, cache_len, dtype=None):
+    dtype = dtype or cfg.dtype
+    n_prefix, n_scan, period = _stack_plan(cfg)
+    kinds = _kinds_for_period(cfg, n_prefix, period)
+    cache: dict[str, Any] = {"pos_offset": jnp.zeros((batch,), jnp.int32)}
+    for i in range(n_prefix):
+        cache[f"prefix{i}"] = _sublayer_cache(cfg, cfg.layer_kind(i), batch,
+                                              cache_len, dtype)
+    one = {f"sub{i}": _sublayer_cache(cfg, kinds[i][0], batch, cache_len,
+                                      dtype)
+           for i in range(period)}
+    cache["stack"] = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_scan,) + a.shape), one)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch):
+    """Returns (x, positions, targets, loss_mask)."""
+    emb = params["embed"]
+    if cfg.frontend == "audio_frames":
+        x = batch["features"]
+        B, T = x.shape[:2]
+        return x, jnp.arange(T)[None, :], batch.get("targets"), \
+            batch.get("mask")
+    if cfg.frontend == "vision_patches" and "patches" in batch:
+        tok_emb = emb[batch["tokens"]]
+        x = jnp.concatenate([batch["patches"].astype(tok_emb.dtype), tok_emb],
+                            axis=1)
+        B, T = x.shape[:2]
+        tgt = batch.get("targets")
+        mask = None
+        if tgt is not None:
+            P = cfg.n_frontend_tokens
+            pad = jnp.zeros((B, P), tgt.dtype)
+            tgt = jnp.concatenate([pad, tgt], axis=1)
+            mask = jnp.concatenate([jnp.zeros((B, P), bool),
+                                    jnp.ones((B, T - P), bool)], axis=1)
+        return x, jnp.arange(T)[None, :], tgt, mask
+    tokens = batch["tokens"]
+    x = emb[tokens]
+    T = tokens.shape[1]
+    return x, jnp.arange(T)[None, :], batch.get("targets"), None
+
+
+def _run_stack(cfg, params, x, positions, dist, kernel_fns, want_cache,
+               in_cache=None, pos=None):
+    """Applies prefix layers then the scanned stack.
+    Returns (x, cache_out, total_aux)."""
+    n_prefix, n_scan, period = _stack_plan(cfg)
+    kinds = _kinds_for_period(cfg, n_prefix, period)
+    aux_total = jnp.zeros((), jnp.float32)
+    cache_out: dict[str, Any] = {}
+
+    for i in range(n_prefix):
+        c_in = in_cache[f"prefix{i}"] if in_cache is not None else None
+        x, c, aux = _layer_apply(
+            cfg, params[f"prefix{i}"], x, positions=positions, dist=dist,
+            kernel_fns=kernel_fns, kind=cfg.layer_kind(i),
+            ffn=cfg.ffn_kind(i), cache=c_in or None, pos=pos,
+            want_cache=want_cache)
+        cache_out[f"prefix{i}"] = c
+        aux_total += aux
+
+    def period_body(x, xs):
+        p_period, c_period = xs
+        caches = {}
+        aux_p = jnp.zeros((), jnp.float32)
+        for i in range(period):
+            sub_c = None
+            if c_period is not None and f"sub{i}" in c_period and \
+                    c_period[f"sub{i}"]:
+                sub_c = c_period[f"sub{i}"]
+            x, c, aux = _layer_apply(
+                cfg, p_period[f"sub{i}"], x, positions=positions, dist=dist,
+                kernel_fns=kernel_fns, kind=kinds[i][0], ffn=kinds[i][1],
+                cache=sub_c, pos=pos, want_cache=want_cache)
+            caches[f"sub{i}"] = c
+            aux_p += aux
+        return x, (caches, aux_p)
+
+    def sharded_body(x, xs):
+        x, out = period_body(x, xs)
+        return _constrain_act(cfg, x, dist), out
+
+    body = sharded_body
+    if cfg.remat:
+        body = jax.checkpoint(sharded_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    stack_cache = in_cache["stack"] if in_cache is not None else None
+    xs = (params["stack"], stack_cache)
+    if cfg.unroll:                       # FLOP-accounting mode: no while loop
+        caches_l, aux_l = [], []
+        for i in range(n_scan):
+            xs_i = jax.tree.map(lambda a: a[i], xs)
+            x, (c, a) = body(x, xs_i)
+            caches_l.append(c)
+            aux_l.append(a)
+        caches = jax.tree.map(lambda *cs: jnp.stack(cs), *caches_l) \
+            if caches_l and jax.tree.leaves(caches_l[0]) else caches_l[0]
+        aux_per = jnp.stack(aux_l)
+    else:
+        x, (caches, aux_per) = jax.lax.scan(body, x, xs)
+    cache_out["stack"] = caches
+    return x, cache_out, aux_total + jnp.sum(aux_per)
+
+
+def _constrain_act(cfg, x, dist):
+    """Residual-stream sharding constraint between layers."""
+    if dist is None or dist.mesh is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    da = dist.data_axes if len(dist.data_axes) > 1 else "data"
+    b_ax = da if x.shape[0] % dist.data_size == 0 else None
+    if cfg.act_shard == "seq" and x.shape[1] % dist.model_size == 0:
+        spec = P(b_ax, dist.model_axis, None)
+    elif cfg.act_shard == "dmodel" and x.shape[2] % dist.model_size == 0:
+        spec = P(b_ax, None, dist.model_axis)
+    else:
+        spec = P(b_ax, None, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _logits(cfg, params, x):
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(x, head)
+
+
+def train_loss(cfg, params, batch, dist=None, kernel_fns=None):
+    x, positions, targets, mask = _embed_inputs(cfg, params, batch)
+    x = _constrain_act(cfg, x, dist)
+    x, _, aux = _run_stack(cfg, params, x, positions, dist, kernel_fns,
+                           want_cache=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, params, x)
+    if dist is not None and dist.mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        da = dist.data_axes if len(dist.data_axes) > 1 else "data"
+        b_ax = da if logits.shape[0] % dist.data_size == 0 else None
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(b_ax, None, dist.model_axis))
+    loss = cross_entropy(logits, targets, mask)
+    total = loss + 0.01 * aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def prefill(cfg, params, batch, dist=None, kernel_fns=None):
+    x, positions, _, _ = _embed_inputs(cfg, params, batch)
+    x, cache, _ = _run_stack(cfg, params, x, positions, dist, kernel_fns,
+                             want_cache=True)
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, params, x)
+    cache["pos_offset"] = jnp.full((x.shape[0],), positions.shape[-1],
+                                   jnp.int32)
+    return logits[:, 0], cache
+
+
+def decode_step(cfg, params, cache, token, pos, dist=None, kernel_fns=None):
+    """token: (B,1) int32; pos: (B,) absolute position of `token`."""
+    x = params["embed"][token]
+    x, new_cache, _ = _run_stack(cfg, params, x, positions=pos[:, None],
+                                 dist=dist, kernel_fns=kernel_fns,
+                                 want_cache=False, in_cache=cache, pos=pos)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, params, x)
+    new_cache["pos_offset"] = pos + 1
+    return logits[:, 0], new_cache

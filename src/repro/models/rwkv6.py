@@ -1,0 +1,142 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+
+Faithful to arXiv:2404.05892: token-shift with data-dependent lerp (the
+5-way LoRA), per-channel data-dependent decay w = exp(-exp(.)), bonus u,
+multi-head wkv state (dh x dh per head), per-head group norm, and a
+squared-ReLU channel mix. Norms are RMSNorm (deviation from the
+reference LayerNorm; documented in DESIGN.md).
+
+The model path uses the sequential `wkv_scan` (one lax.scan over time,
+O(1) state). The chunked MXU-friendly formulation lives in
+repro/kernels/rwkv6_wkv.py (Pallas) with its oracle in kernels/ref.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+LORA_DIM = 32
+DECAY_LORA_DIM = 64
+
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    ks = jax.random.split(key, 12)
+    p = {
+        # time-mix (attention analogue)
+        "maa_x": jnp.zeros((d,), dtype),
+        "maa_wkvrg": jnp.zeros((5, d), dtype),
+        "tm_w1": init_dense(ks[0], d, 5 * LORA_DIM, dtype),
+        "tm_w2": (jax.random.normal(ks[1], (5, LORA_DIM, d)) *
+                  LORA_DIM ** -0.5).astype(dtype),
+        "w0": jnp.full((d,), -1.0, dtype),       # base decay logit
+        "td_w1": init_dense(ks[2], d, DECAY_LORA_DIM, dtype),
+        "td_w2": init_dense(ks[3], DECAY_LORA_DIM, d, dtype),
+        "u": (jax.random.normal(ks[4], (H, dh)) * 0.1).astype(dtype),
+        "wr": init_dense(ks[5], d, d, dtype),
+        "wk": init_dense(ks[6], d, d, dtype),
+        "wv": init_dense(ks[7], d, d, dtype),
+        "wg": init_dense(ks[8], d, d, dtype),
+        "wo": init_dense(ks[9], d, d, dtype),
+        "gn_w": jnp.ones((d,), dtype),
+        # channel mix
+        "cm_maa_k": jnp.zeros((d,), dtype),
+        "cm_maa_r": jnp.zeros((d,), dtype),
+        "cm_wk": init_dense(ks[10], d, cfg.d_ff, dtype),
+        "cm_wv": init_dense(ks[11], cfg.d_ff, d, dtype),
+        "cm_wr": init_dense(jax.random.fold_in(key, 99), d, d, dtype),
+    }
+    return p
+
+
+def _group_norm(x, weight, H, eps=1e-5):
+    """Per-head normalization. x: (..., H*dh)."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], H, shp[-1] // H).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent token-shift lerp -> (xw, xk, xv, xr, xg)."""
+    xxx = x + sx * p["maa_x"]
+    lora = jnp.tanh(xxx @ p["tm_w1"])
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_DIM)
+    deltas = jnp.einsum("...fk,fkd->...fd", lora, p["tm_w2"])
+    mix = p["maa_wkvrg"] + deltas          # (..., 5, d)
+    return tuple(x + sx * mix[..., i, :] for i in range(5))
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Sequential wkv recurrence.
+
+    r,k,v,w: (B,T,H,dh); u: (H,dh); state: (B,H,dh,dh) [k-dim x v-dim].
+    Returns (y (B,T,H,dh), final state). fp32 internally.
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                    # (B,H,dh)
+        kv = kt[..., :, None] * vt[..., None, :]     # (B,H,dh,dh)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + uf[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    state, y = jax.lax.scan(step, state.astype(jnp.float32),
+                            (rf, kf, vf, wf))
+    return y.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def time_mix(p, cfg, x, shift_state, wkv_state, kernel_fn=None):
+    """x: (B,T,d). shift_state: (B,d) (last token of previous segment).
+    Returns (out, new_shift_state, new_wkv_state)."""
+    B, T, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    sx = prev - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+
+    r = (xr @ p["wr"]).reshape(B, T, H, dh)
+    k = (xk @ p["wk"]).reshape(B, T, H, dh)
+    v = (xv @ p["wv"]).reshape(B, T, H, dh)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(-jnp.exp((p["w0"] + jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"])
+                         .astype(jnp.float32))).reshape(B, T, H, dh)
+
+    wkv = kernel_fn or wkv_scan
+    y, wkv_state = wkv(r, k, v, w.astype(r.dtype), p["u"], wkv_state)
+    y = _group_norm(y.reshape(B, T, d), p["gn_w"], H)
+    out = (y * g) @ p["wo"]
+    return out, x[:, -1, :], wkv_state
+
+
+def channel_mix(p, x, shift_state):
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    sx = prev - x
+    xk = x + sx * p["cm_maa_k"]
+    xr = x + sx * p["cm_maa_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"]), x[:, -1, :]
+
+
+def rwkv_state_init(cfg, batch, dtype=None):
+    """Per-layer recurrent state (stacked over layers by the assembler).
+    Token-shift states live in the model dtype (they concat with
+    activations); the wkv state stays fp32 for the recurrence."""
+    d, dh = cfg.d_model, cfg.rwkv_head_dim
+    H = d // dh
+    dtype = dtype or cfg.dtype
+    return {
+        "att_shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+    }

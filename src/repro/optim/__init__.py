@@ -1,0 +1,14 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.schedule import cosine_warmup
+
+
+def make_optimizer(cfg):
+    """Returns (init_fn(params), update_fn(grads, state, params, lr))."""
+    if cfg.optimizer == "adafactor":
+        return adafactor_init, adafactor_update
+    return adamw_init, adamw_update
+
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init",
+           "adafactor_update", "cosine_warmup", "make_optimizer"]

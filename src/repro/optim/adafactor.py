@@ -1,0 +1,65 @@
+"""Adafactor (factored second moment, no first moment) for the 1T-param
+MoE arch: O(n+m) optimizer state per (n,m) matrix instead of Adam's 2nm.
+Factored over the last two dims of >=2-D params; 1-D params keep a full
+second moment."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS1 = 1e-30
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "v": jax.tree.map(init, params),
+    }
+
+
+def adafactor_update(grads, state, params, lr, *, decay=0.8, clip=1.0,
+                     weight_decay=0.0, eps=1e-8):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** -decay
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + EPS1
+        if _factored(p):
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, -1, keepdims=True), EPS1) + eps)
+            cfac = jax.lax.rsqrt(vc + eps)
+            u = g * rfac[..., None] * cfac[..., None, :]
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nvv = beta * v["v"] + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(nvv + eps)
+            nv = {"v": nvv}
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(u * u) + EPS1)
+        u = u / jnp.maximum(1.0, rms / clip)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nv
+
+    leaves, treedef = jax.tree.flatten(params)
+    gl = treedef.flatten_up_to(grads)
+    vl = treedef.flatten_up_to(state["v"])
+    out = [upd(g, v, p) for g, v, p in zip(gl, vl, leaves)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    return new_params, {"step": step, "v": new_v}

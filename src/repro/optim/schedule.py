@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr=3e-4, warmup=100, total=10_000,
+                  min_ratio=0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * (t + 1.0) / max(warmup, 1)
+    prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,1 @@
+from repro.serving.batcher import ContinuousBatcher, Request

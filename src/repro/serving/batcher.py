@@ -1,0 +1,138 @@
+"""Continuous batching for decode serving.
+
+A fixed pool of `n_slots` decode slots shares one jitted decode step
+(static shapes: the cache is allocated once at `max_len`). Requests are
+admitted into free slots as they arrive (prefill writes the slot's cache
+region), every decode tick advances all live slots in lock-step with a
+per-slot position vector, and finished slots (EOS or length budget) are
+freed immediately for the next queued request — no batch drain barrier.
+
+This is the node-level LC/DC hook for serving: `idle_fraction()` reports
+how often the pool has no live slots, which is exactly the gating window
+the ICI study's `idle_frac` models (EXPERIMENTS.md SSBeyond-paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: list                      # prompt token ids
+    max_new: int = 16
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg, params, *, n_slots: int = 4,
+                 max_len: int = 128, eos_id: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = M.init_cache(cfg, n_slots, max_len, dtype=cfg.dtype)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.last_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+        self.ticks = 0
+        self.idle_ticks = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t, po: M.decode_step(cfg, p, c, t, po))
+        # single-request prefill (B=1), merged into the pooled cache
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(cfg, p, b))
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+            logits, pre_cache = self._prefill(self.params,
+                                              {"tokens": toks})
+            self._write_slot(s, pre_cache, len(req.tokens))
+            nxt = int(jnp.argmax(logits[0]))
+            req.out.append(nxt)
+            self.slot_req[s] = req
+            self.pos = self.pos.at[s].set(len(req.tokens))
+            self.last_tok = self.last_tok.at[s, 0].set(nxt)
+
+    def _write_slot(self, s: int, pre_cache, plen: int):
+        """Copy a single-request prefill cache into slot s of the pool.
+
+        Handles both flat leaves (batch at axis 0) and layer-stacked
+        leaves (n_scan at axis 0, batch at axis 1); shorter prefill seq
+        dims land at offset 0 of the slot's region.
+        """
+        def merge(pool, single):
+            if single.ndim != pool.ndim:
+                return pool
+            for ax in (0, 1):
+                if pool.ndim <= ax:
+                    break
+                if pool.shape[ax] == self.n_slots and \
+                        single.shape[ax] == 1 and \
+                        pool.shape[:ax] == single.shape[:ax]:
+                    sl = jnp.take(single, 0, axis=ax)
+                    dst = jnp.take(pool, s, axis=ax)
+                    upd = jax.lax.dynamic_update_slice(
+                        dst, sl.astype(pool.dtype), (0,) * dst.ndim)
+                    if ax == 0:
+                        return pool.at[s].set(upd)
+                    return pool.at[:, s].set(upd)
+            return pool
+        self.cache = jax.tree.map(merge, self.cache, pre_cache)
+
+    # -- decode loop --------------------------------------------------------
+    def step(self):
+        """One lock-step decode tick over all slots."""
+        self._admit()
+        self.ticks += 1
+        live = [s for s in range(self.n_slots)
+                if self.slot_req[s] is not None]
+        if not live:
+            self.idle_ticks += 1
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.last_tok, self.pos)
+        nxt = jnp.argmax(logits, axis=-1)
+        self.pos = self.pos + 1
+        self.last_tok = nxt[:, None].astype(jnp.int32)
+        emitted = 0
+        for s in live:
+            req = self.slot_req[s]
+            tok = int(nxt[s])
+            req.out.append(tok)
+            emitted += 1
+            length_done = len(req.out) >= req.max_new
+            eos_done = self.eos_id is not None and tok == self.eos_id
+            full = int(self.pos[s]) >= self.max_len - 1
+            if length_done or eos_done or full:
+                req.done = True
+                self.slot_req[s] = None     # slot freed for the queue
+        return emitted
+
+    def run(self, max_ticks: int = 1000) -> list[Request]:
+        finished: list[Request] = []
+        seen = set()
+        while self.ticks < max_ticks and \
+                (self.queue or any(self.slot_req)):
+            self.step()
+        return finished
+
+    def idle_fraction(self) -> float:
+        return self.idle_ticks / max(self.ticks, 1)

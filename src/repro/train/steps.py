@@ -1,0 +1,98 @@
+"""Jittable train / prefill / decode step factories.
+
+``make_train_step`` closes over (cfg, dist, optimizer) and returns a pure
+function (params, opt_state, batch, step) -> (params, opt_state, metrics);
+the launcher jits it with the sharding specs from distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import model as model_lib
+from repro.optim import make_optimizer
+from repro.optim.schedule import cosine_warmup
+
+
+def _constrain_batch(batch, dist):
+    if dist is None or dist.mesh is None:
+        return batch
+    da = dist.data_axes if len(dist.data_axes) > 1 else "data"
+
+    def c(x):
+        B = x.shape[0] if x.ndim else 0
+        if x.ndim and B % dist.data_size == 0:
+            return jax.lax.with_sharding_constraint(
+                x, P(da, *([None] * (x.ndim - 1))))
+        return x
+
+    return jax.tree.map(c, batch)
+
+
+def make_train_step(cfg, dist=None, kernel_fns=None, peak_lr=3e-4,
+                    warmup=100):
+    _, opt_update = make_optimizer(cfg)
+
+    def train_step(params, opt_state, batch, step):
+        batch = _constrain_batch(batch, dist)
+
+        def loss_fn(p, b):
+            loss, metrics = model_lib.train_loss(cfg, p, b, dist,
+                                                 kernel_fns)
+            return loss, metrics
+
+        if cfg.microbatches > 1:
+            k = cfg.microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]),
+                batch)
+
+            def acc_step(carry, b):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, _constrain_batch(b, dist))
+                carry = jax.tree.map(
+                    lambda c, gi: (c.astype(jnp.float32)
+                                   + gi.astype(jnp.float32) / k)
+                    .astype(c.dtype), carry, g)
+                return carry, (l, m)
+
+            # accumulate in the param dtype: an f32 accumulator for a
+            # 1T-param model costs 16 GB/device (sharded) -- bf16 halves
+            # it at ~2 bits of accumulation precision (documented)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            grads, (losses, ms) = jax.lax.scan(acc_step, zeros, mb)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        lr = cosine_warmup(step, peak_lr=peak_lr, warmup=warmup)
+        new_params, new_opt = opt_update(grads, opt_state, params, lr)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, dist=None, kernel_fns=None):
+    def prefill_step(params, batch):
+        batch = _constrain_batch(batch, dist)
+        return model_lib.prefill(cfg, params, batch, dist, kernel_fns)
+    return prefill_step
+
+
+def make_decode_step(cfg, dist=None, kernel_fns=None):
+    def decode(params, cache, token, pos):
+        return model_lib.decode_step(cfg, params, cache, token, pos, dist,
+                                     kernel_fns)
+    return decode
+
+
+def serve_step(cfg, params, cache, token, pos, dist=None):
+    """One new token against an existing KV cache (the ``decode_*`` /
+    ``long_*`` dry-run entry point)."""
+    return model_lib.decode_step(cfg, params, cache, token, pos, dist)

@@ -1,0 +1,17 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here; smoke
+# tests and benches must see 1 device. Multi-device tests spawn
+# subprocesses (tests/_subproc.py) with their own XLA_FLAGS.
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,80 @@
+"""Gradient compression (int8 + error feedback) and optimizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.distributed.compression import (compress_grads, dequantize_int8,
+                                           ef_state_init, quantize_int8)
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update)
+from repro.optim.schedule import cosine_warmup
+
+
+@given(st.integers(0, 1000))
+def test_quantize_roundtrip_error_bound(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3.0
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6      # half-ULP bound
+
+
+def test_error_feedback_preserves_sum():
+    """With EF, the accumulated compressed gradients track the true sum."""
+    key = jax.random.PRNGKey(0)
+    grads = [{"w": jax.random.normal(jax.random.fold_in(key, i), (32, 8))
+              * 0.01} for i in range(50)]
+    ef = ef_state_init(grads[0])
+    acc_c = jnp.zeros((32, 8))
+    acc_t = jnp.zeros((32, 8))
+    for g in grads:
+        cg, ef = compress_grads(g, ef)
+        acc_c += cg["w"]
+        acc_t += g["w"]
+    # residual is bounded by one quantization step, not O(n_steps)
+    resid = float(jnp.max(jnp.abs(acc_c - acc_t)))
+    onestep = float(jnp.max(jnp.abs(jax.tree.leaves(ef)[0])))
+    assert resid <= onestep + 1e-5
+
+
+def _quadratic_losses(opt_init, opt_update, steps=60, lr=0.1):
+    target = jnp.array([1.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt_init(params)
+    losses = []
+    for _ in range(steps):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state = opt_update(grads, state, params, lr,
+                                   weight_decay=0.0)
+        losses.append(float(jnp.sum((params["w"] - target) ** 2)))
+    return losses
+
+
+def test_adamw_converges():
+    losses = _quadratic_losses(adamw_init, adamw_update)
+    assert losses[-1] < 1e-2 * losses[0]
+
+
+def test_adafactor_converges():
+    losses = _quadratic_losses(adafactor_init, adafactor_update, lr=0.3)
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_adafactor_state_is_factored():
+    params = {"big": jnp.zeros((128, 64)), "vec": jnp.zeros((16,))}
+    st_ = adafactor_init(params)
+    assert st_["v"]["big"]["vr"].shape == (128,)
+    assert st_["v"]["big"]["vc"].shape == (64,)
+    assert st_["v"]["vec"]["v"].shape == (16,)
+    n_state = sum(x.size for x in jax.tree.leaves(st_))
+    n_adam = 2 * sum(x.size for x in jax.tree.leaves(params))
+    assert n_state < n_adam / 10
+
+
+def test_cosine_warmup_shape():
+    import numpy as np
+    lrs = [float(cosine_warmup(jnp.asarray(s), peak_lr=1.0, warmup=10,
+                               total=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert np.argmax(lrs) <= 12
+    assert lrs[-1] < 0.2

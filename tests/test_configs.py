@@ -1,0 +1,108 @@
+"""Assigned-architecture configs match the spec table exactly."""
+import pytest
+
+from repro.configs import ARCH_IDS, REGISTRY, SHAPES, cells_for, get_config
+
+SPEC = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, None, 163840),
+    "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+    "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+    "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "rwkv6-7b": (32, 4096, None, None, 14336, 65536),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+}
+
+
+def test_all_archs_present():
+    assert set(ARCH_IDS) == set(SPEC)
+
+
+@pytest.mark.parametrize("arch", list(SPEC))
+def test_config_matches_spec(arch):
+    L, d, H, kv, dff, vocab = SPEC[arch]
+    c = get_config(arch)
+    assert c.n_layers == L and c.d_model == d and c.vocab == vocab
+    if H is not None and not c.attention_free:
+        assert c.n_heads == H and c.n_kv == kv
+    if dff is not None:
+        assert c.d_ff == dff
+
+
+def test_moe_setups():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.n_experts == 384 and kimi.top_k == 8 and kimi.d_expert == 2048
+    assert kimi.first_dense == 1
+    mix = get_config("mixtral-8x7b")
+    assert mix.n_experts == 8 and mix.top_k == 2 and mix.swa_window == 4096
+    jam = get_config("jamba-v0.1-52b")
+    assert jam.n_experts == 16 and jam.top_k == 2
+    # jamba layer pattern: attention at i % 8 == 4, moe at odd layers
+    kinds = [jam.layer_kind(i) for i in range(8)]
+    assert kinds == ["mamba"] * 4 + ["attn"] + ["mamba"] * 3
+    assert jam.ffn_kind(1) == "moe" and jam.ffn_kind(2) == "mlp"
+
+
+def test_param_counts_in_expected_range():
+    """6ND sanity: the analytic parameter counts must land near the
+    advertised model sizes."""
+    expect = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "mixtral-8x7b": (42e9, 50e9),
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "minicpm3-4b": (3e9, 5e9),
+        "granite-34b": (30e9, 38e9),
+        "qwen3-8b": (7e9, 10e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "jamba-v0.1-52b": (45e9, 58e9),
+        "internvl2-76b": (62e9, 80e9),   # LLM backbone of the 76B VLM
+        "hubert-xlarge": (0.8e9, 1.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_params_kimi():
+    c = get_config("kimi-k2-1t-a32b")
+    act = c.n_active_params()
+    assert 20e9 <= act <= 45e9           # "a32b"
+    assert act < c.n_params() / 10
+
+
+def test_cell_skip_rules():
+    total_run, total_skip = 0, 0
+    for arch in ARCH_IDS:
+        for cell in cells_for(get_config(arch)):
+            total_run += cell.run
+            total_skip += not cell.run
+            if not cell.run:
+                assert cell.skip_reason
+    assert total_run + total_skip == 40           # 10 archs x 4 shapes
+    assert total_run == 32                        # per DESIGN.md
+    # hubert has no decode; full-attention archs skip long_500k
+    hub = {c.shape.name: c.run for c in cells_for(get_config("hubert-xlarge"))}
+    assert not hub["decode_32k"] and not hub["long_500k"]
+    mix = {c.shape.name: c.run for c in cells_for(get_config("mixtral-8x7b"))}
+    assert mix["long_500k"]                       # SWA is sub-quadratic
+    q8 = {c.shape.name: c.run for c in cells_for(get_config("qwen3-8b"))}
+    assert not q8["long_500k"]
+
+
+def test_padded_vocab_divisible():
+    for arch in ARCH_IDS:
+        c = get_config(arch)
+        assert c.padded_vocab % 512 == 0
+        assert c.padded_vocab >= c.vocab
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,82 @@
+"""Energy models (Fig 1 / Fig 11) and the node-level hiding condition."""
+from hypothesis import given, strategies as st
+
+from repro.core import constants as C
+from repro.core.energy import (dc_savings, final_network_fractions,
+                               power_breakdown_series)
+from repro.core.node_model import (STACK_STAGES, default_timing,
+                                   hiding_condition,
+                                   max_hideable_laser_on_us)
+from repro.core.topology import all_designs, fb_site_design, FBSite
+
+
+def test_stack_budget_is_3750ns():
+    assert sum(ns for _, ns in STACK_STAGES) == 3750
+
+
+def test_laser_turn_on_hidden():
+    t = default_timing()
+    assert t.hidden and t.added_latency_ns == 0.0
+    assert hiding_condition(C.LASER_ON_US)
+
+
+def test_max_hideable_exceeds_sfp_requirement():
+    assert max_hideable_laser_on_us() >= 3.0     # >> the 1 us SFP+ turn-on
+
+
+@given(st.floats(0.01, 10.0))
+def test_property_hiding_condition(laser_us):
+    hidden = hiding_condition(laser_us)
+    assert hidden == (laser_us + C.CDR_LOCK_US <= C.SENDMSG_TO_TX_US)
+
+
+def test_fig1_network_fraction_grows():
+    """With every optimization the network share of DC power rises; the
+    oversubscribed fb_clos is the sparsest fabric, the average across
+    designs crosses 25% (paper: network 'becomes a major component')."""
+    fracs = []
+    for d in all_designs():
+        series = power_breakdown_series(d, util=0.30)
+        net = [sum(v for k, v in frac.items() if k != "servers")
+               for _, _, frac in series]
+        assert net[0] < 0.25           # classic view: network is small
+        assert net[-1] > net[1]        # optimizations expose the network
+        fracs.append(net[-1])
+    assert sum(fracs) / len(fracs) > 0.25
+    d = fb_site_design()
+    series = power_breakdown_series(d, util=0.30)
+    assert sum(v for k, v in series[-1][2].items() if k != "servers") > 0.15
+
+
+def test_fig1_final_transceiver_fraction():
+    """Paper: transceivers ~20% avg; PHY+NIC+transceivers up to 46%."""
+    fr = final_network_fractions(0.30)
+    tx = [v["transceivers"] for v in fr.values()]
+    full = [v["phy_nic_transceivers"] for v in fr.values()]
+    assert 0.10 <= sum(tx) / len(tx) <= 0.30
+    assert max(full) >= 0.35
+
+
+def test_fig11_dc_savings():
+    """Paper: ~12% (links only) and ~21-27% (with PHY+NIC) at 30% util
+    when LC/DC leaves ~40% of transceiver power on."""
+    res = dc_savings(transceiver_on_frac=0.4, util=0.30)
+    avg = res["average"]
+    assert 0.06 <= avg.savings_links_only <= 0.20
+    assert avg.savings_with_phy_nic > avg.savings_links_only
+    assert 0.15 <= avg.savings_with_phy_nic <= 0.35
+
+
+def test_fb_site_counts():
+    s = FBSite()
+    assert s.n_servers == 6144 and s.n_racks == 128
+    assert s.n_rsw_csw_links == 512 and s.n_csw_fc_links == 64
+    pw = s.transceiver_power_w()
+    assert pw["server"] == 6144 * 2.0
+    assert pw["csw_fc"] == 64 * 2 * 2.4
+
+
+def test_all_designs_have_positive_power():
+    for d in all_designs():
+        p = d.network_power_w()
+        assert all(v > 0 for v in p.values())

@@ -1,0 +1,102 @@
+"""Watermark stage-controller unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import gating
+
+
+def steps(state, queues, n, **kw):
+    for _ in range(n):
+        state = gating.gate_step(state, queues, **kw)
+    return state
+
+
+def test_initial_state_stage_one():
+    s = gating.gate_init(4, 4)
+    assert np.all(np.asarray(s.stage) == 1)
+    assert np.asarray(s.powered).sum() == 4          # one link each
+
+
+def test_stage_up_on_high_watermark():
+    s = gating.gate_init(1, 4)
+    hot = jnp.array([[19.0, 0, 0, 0]])
+    s = steps(s, hot, 5, cap=20, up_delay=2)
+    # sustained load over the watermark keeps raising stages
+    assert 2 <= int(s.stage[0]) <= 3
+    # the rising/active links were charged as powered
+    assert bool(s.powered[0, 1])
+
+
+def test_stage_down_after_drain_and_dwell():
+    s = gating.gate_init(1, 4)
+    s = s._replace(stage=jnp.array([3], jnp.int32))
+    idle = jnp.zeros((1, 4))
+    s = steps(s, idle, 80, cap=20, dwell=0, off_delay=5)
+    assert int(s.stage[0]) == 1                      # drained back to floor
+
+
+def test_never_below_stage_one():
+    s = gating.gate_init(8, 4)
+    idle = jnp.zeros((8, 4))
+    s = steps(s, idle, 200, dwell=0)
+    assert np.all(np.asarray(s.stage) >= 1)
+    assert np.all(np.asarray(s.powered)[:, 0])       # stage-1 link stays on
+
+
+def test_dwell_blocks_flap():
+    s = gating.gate_init(1, 4)
+    hot = jnp.array([[19.0, 0, 0, 0]])
+    s = steps(s, hot, 4, cap=20, up_delay=2, dwell=100)
+    lvl = int(s.stage[0])
+    assert lvl >= 2
+    idle = jnp.zeros((1, 4))
+    s2 = steps(s, idle, 20, cap=20, dwell=100)
+    assert int(s2.stage[0]) == lvl                   # held by dwell
+    s3 = steps(s, idle, 400, cap=20, dwell=100)
+    assert int(s3.stage[0]) == 1                     # released after dwell
+
+
+def test_off_transition_charged():
+    s = gating.gate_init(1, 2)
+    s = s._replace(stage=jnp.array([2], jnp.int32))
+    idle = jnp.zeros((1, 2))
+    s = steps(s, idle, 3, dwell=0, off_delay=10)
+    # stage already dropped but the link is still charged (off transition)
+    assert int(s.stage[0]) == 1
+    assert bool(s.powered[0, 1])
+    s = steps(s, idle, 12, dwell=0, off_delay=10)
+    assert not bool(s.powered[0, 1])
+
+
+@given(st.lists(st.floats(0, 20), min_size=4, max_size=4),
+       st.integers(1, 4))
+def test_property_connectivity_and_power_superset(qs, stage0):
+    """Invariants: stage in [1, L]; powered >= active links; link 0 on."""
+    s = gating.gate_init(1, 4)._replace(
+        stage=jnp.array([stage0], jnp.int32))
+    q = jnp.array([qs])
+    for _ in range(5):
+        s = gating.gate_step(s, q, cap=20)
+        st_ = int(s.stage[0])
+        assert 1 <= st_ <= 4
+        powered = np.asarray(s.powered)[0]
+        active = np.arange(4) < st_
+        drain_top = bool(s.draining[0])
+        usable = np.asarray(gating.active_mask(s, 4))[0]
+        # every usable link is powered
+        assert np.all(~usable | powered)
+        assert powered[0]
+
+
+@given(st.integers(0, 3))
+def test_property_monotone_under_sustained_load(seed):
+    """Sustained saturation drives the stage to max and keeps it there."""
+    rng = np.random.default_rng(seed)
+    s = gating.gate_init(2, 4)
+    for _ in range(60):
+        q = jnp.asarray(rng.uniform(16, 20, size=(2, 4)))
+        prev = np.asarray(s.stage).copy()
+        s = gating.gate_step(s, q, cap=20, up_delay=1)
+        assert np.all(np.asarray(s.stage) >= prev)   # never down under load
+    assert np.all(np.asarray(s.stage) == 4)

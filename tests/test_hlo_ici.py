@@ -1,0 +1,68 @@
+"""HLO collective parsing + the beyond-paper ICI gating policies."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ici_gating import (StepPhases, reactive_policy,
+                                   scheduled_policy)
+from repro.launch.hlo_analysis import parse_collectives
+
+SAMPLE_HLO = """
+  %all-reduce = f32[16,1024]{1,0} all-reduce(%x), channel_id=1, replica_groups=[4,2]<=[8], use_global_device_ids=true, to_apply=%sum
+  %all-gather = bf16[8,4096]{1,0} all-gather(%y), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %reduce-scatter = f32[4,128]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[1,8]<=[8], dimensions={0}
+  %cp = bf16[128]{0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1}}
+  %all-reduce-done = f32[16,1024]{1,0} all-reduce-done(%ar)
+  %foo = f32[2,2]{1,0} add(%a, %b)
+"""
+
+
+def test_parse_collectives_ops_and_sizes():
+    st = parse_collectives(SAMPLE_HLO)
+    by = st.by_op()
+    assert by["all-reduce"]["count"] == 1
+    assert by["all-gather"]["count"] == 1
+    assert by["reduce-scatter"]["count"] == 1
+    assert by["collective-permute"]["count"] == 1
+    assert by["all-reduce"]["result_bytes"] == 16 * 1024 * 4
+    assert by["all-gather"]["result_bytes"] == 8 * 4096 * 2
+    # ring factors
+    ar = 2 * 16 * 1024 * 4 * (2 - 1) / 2      # group size 2
+    assert abs(by["all-reduce"]["link_bytes"] - ar) < 1e-6
+    rs = 4 * 128 * 4 * (8 - 1)                # group size 8
+    assert abs(by["reduce-scatter"]["link_bytes"] - rs) < 1e-6
+
+
+def _phases(duty=0.2):
+    # 100 us compute + 25 us collective per layer
+    return StepPhases("x", "train_4k", n_layers=8, t_compute_us=100.0,
+                      t_collective_us=25.0, t_tail_us=50.0,
+                      coll_tail_us=10.0)
+
+
+def test_scheduled_policy_saves_energy_at_zero_latency():
+    r = scheduled_policy(_phases())
+    assert r["latency_penalty"] == 0.0
+    assert 0.0 < r["ici_energy_savings"] < 0.75
+    # one link-pair always on -> savings ceiling is 3/4
+    assert r["link_on_frac"] >= 0.25
+
+
+def test_scheduled_policy_idle_scales_savings():
+    busy = scheduled_policy(_phases(), idle_frac=0.0)
+    idle = scheduled_policy(_phases(), idle_frac=0.8)
+    assert idle["ici_energy_savings"] > busy["ici_energy_savings"]
+
+
+def test_reactive_policy_pays_latency():
+    ph = _phases()
+    r = reactive_policy(ph)
+    s = scheduled_policy(ph)
+    assert r["ici_energy_savings"] <= s["ici_energy_savings"] + 0.15
+    assert r["latency_penalty"] >= 0.0
+
+
+def test_collective_bound_step_saves_little():
+    ph = StepPhases("x", "train_4k", n_layers=8, t_compute_us=10.0,
+                    t_collective_us=50.0, t_tail_us=0.0, coll_tail_us=0.0)
+    r = scheduled_policy(ph)
+    assert r["ici_energy_savings"] < 0.2

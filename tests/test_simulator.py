@@ -1,0 +1,69 @@
+"""Network-simulator behaviour tests (short runs)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import SimParams, run_sim
+from repro.core.traffic import TRAFFIC_SPECS
+
+TICKS = 8_000
+
+
+@pytest.fixture(scope="module")
+def hadoop_results():
+    lc = run_sim(SimParams(spec=TRAFFIC_SPECS["fb_hadoop"]), TICKS, seed=0)
+    base = run_sim(SimParams(spec=TRAFFIC_SPECS["fb_hadoop"],
+                             gating_enabled=False), TICKS, seed=0)
+    return lc, base
+
+
+def test_baseline_has_no_savings(hadoop_results):
+    _, base = hadoop_results
+    assert base["switch_energy_savings_frac"] == 0.0
+    assert base["rsw_link_on_frac"] == 1.0
+
+
+def test_gating_saves_energy(hadoop_results):
+    lc, _ = hadoop_results
+    assert 0.30 <= lc["switch_energy_savings_frac"] <= 0.75
+    # stage 1 is never gated: on-fraction >= 25%
+    assert lc["rsw_link_on_frac"] >= 0.25 - 1e-9
+    assert lc["csw_link_on_frac"] >= 0.25 - 1e-9
+
+
+def test_latency_penalty_bounded(hadoop_results):
+    lc, base = hadoop_results
+    pen = lc["mean_latency_us"] / base["mean_latency_us"] - 1.0
+    assert -0.05 <= pen <= 0.60, pen
+    assert lc["mean_latency_us"] >= 3.75      # >= the TCP stack alone
+
+
+def test_packet_conservation(hadoop_results):
+    lc, _ = hadoop_results
+    # delivered + drops cannot exceed injected; most packets delivered
+    assert lc["delivered_pkts"] <= lc["injected_pkts"] * 1.001
+    assert lc["delivered_pkts"] >= lc["injected_pkts"] * 0.80
+    assert lc["drop_frac"] < 0.05
+
+
+def test_on_frac_histogram_normalized(hadoop_results):
+    lc, _ = hadoop_results
+    assert abs(sum(lc["on_frac_hist"]) - 1.0) < 1e-6
+
+
+def test_determinism():
+    p = SimParams(spec=TRAFFIC_SPECS["university"])
+    a = run_sim(p, 2_000, seed=42)
+    b = run_sim(p, 2_000, seed=42)
+    assert a["injected_pkts"] == b["injected_pkts"]
+    assert a["switch_energy_savings_frac"] == b["switch_energy_savings_frac"]
+
+
+def test_rate_scale_monotone():
+    """More offered load -> more links on (less savings)."""
+    spec = TRAFFIC_SPECS["microsoft"]
+    lo = run_sim(SimParams(spec=spec, rate_scale=0.3), 6_000, seed=1)
+    hi = run_sim(SimParams(spec=spec, rate_scale=1.5), 6_000, seed=1)
+    assert hi["rsw_link_on_frac"] >= lo["rsw_link_on_frac"] - 0.02
+    assert hi["injected_pkts"] > lo["injected_pkts"]

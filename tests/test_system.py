@@ -1,0 +1,74 @@
+"""End-to-end behaviour of the whole system (CPU, tiny configs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, batch_at
+from repro.models import model as M
+from repro.optim import make_optimizer
+from repro.train.steps import make_train_step
+
+
+def test_end_to_end_train_then_serve():
+    """Train a tiny dense LM for 30 steps on structured data, then serve
+    greedily from a prefill cache: loss falls and decode runs."""
+    cfg = dataclasses.replace(reduced(get_config("qwen3-0.6b")), vocab=256)
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    opt_init, _ = make_optimizer(cfg)
+    opt = opt_init(params)
+    step = jax.jit(make_train_step(cfg, peak_lr=3e-3))
+    losses = []
+    for i in range(30):
+        params, opt, m = step(params, opt, batch_at(data, i),
+                              jnp.asarray(i, jnp.int32))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+    # serve: prefill 16 tokens, decode 8 more greedily
+    prompt = batch_at(data, 999)["tokens"][:2, :16]
+    logits, cache = M.prefill(cfg, params, {"tokens": prompt})
+    cache_full = M.init_cache(cfg, 2, 24, dtype=cfg.dtype)
+    def merge(dst, src):
+        if dst.shape == src.shape:
+            return src
+        for ax in range(dst.ndim):
+            if dst.shape[ax] != src.shape[ax]:
+                sl = [slice(None)] * dst.ndim
+                sl[ax] = slice(0, src.shape[ax])
+                return dst.at[tuple(sl)].set(src)
+        return src
+    cache = jax.tree.map(merge, cache_full, cache)
+    tok = jnp.argmax(logits, -1)[:, None]
+    outs = []
+    dec = jax.jit(lambda p, c, t, po: M.decode_step(cfg, p, c, t, po))
+    for t in range(16, 24):
+        logits, cache = dec(params, cache, tok,
+                            jnp.full((2,), t, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None]
+        outs.append(tok)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+    assert len(outs) == 8
+
+
+def test_paper_validation_headline_numbers():
+    """The headline LC/DC claims hold in short runs: avg switch-tier
+    savings near 60%, latency penalty < 20%, >= half network off most of
+    the time (paper: 60% avg / 68% max savings, +6% delay, 87% half-off)."""
+    from repro.core.simulator import SimParams, run_sim
+    from repro.core.traffic import TRAFFIC_SPECS
+    saves, pens, half = [], [], []
+    for name in ["fb_hadoop", "university", "microsoft"]:
+        lc = run_sim(SimParams(spec=TRAFFIC_SPECS[name]), 10_000, seed=0)
+        base = run_sim(SimParams(spec=TRAFFIC_SPECS[name],
+                                 gating_enabled=False), 10_000, seed=0)
+        saves.append(lc["switch_energy_savings_frac"])
+        pens.append(lc["mean_latency_us"] / base["mean_latency_us"] - 1)
+        half.append(lc["half_off_frac"])
+    assert 0.40 <= float(np.mean(saves)) <= 0.75, saves
+    assert float(np.mean(pens)) <= 0.25, pens
+    assert float(np.mean(half)) >= 0.5, half

@@ -1,0 +1,41 @@
+"""Traffic generator: CDF fidelity vs published targets (paper Fig 7)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.traffic import (TARGET_CDFS, TRAFFIC_SPECS,
+                                pearson_vs_target, sample_flow_sizes,
+                                sample_intervals)
+
+
+@pytest.mark.parametrize("trace", list(TRAFFIC_SPECS))
+def test_flow_size_cdf_matches_target(trace):
+    """Paper reports Pearson r in 0.979-0.992 for flow sizes."""
+    spec = TRAFFIC_SPECS[trace]
+    sizes = sample_flow_sizes(jax.random.PRNGKey(0), spec, 200_000)
+    r = pearson_vs_target(np.asarray(sizes), TARGET_CDFS[trace]["size"])
+    assert r >= 0.95, f"{trace}: r={r:.4f}"
+
+
+@pytest.mark.parametrize("trace", list(TRAFFIC_SPECS))
+def test_interval_cdf_matches_target(trace):
+    """Paper reports Pearson r in 0.894-0.998 for flow intervals."""
+    spec = TRAFFIC_SPECS[trace]
+    iat = sample_intervals(jax.random.PRNGKey(1), spec, 200_000)
+    r = pearson_vs_target(np.asarray(iat), TARGET_CDFS[trace]["interval"])
+    assert r >= 0.89, f"{trace}: r={r:.4f}"
+
+
+def test_sampler_determinism():
+    spec = TRAFFIC_SPECS["fb_web"]
+    a = sample_flow_sizes(jax.random.PRNGKey(7), spec, 1000)
+    b = sample_flow_sizes(jax.random.PRNGKey(7), spec, 1000)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sizes_positive_and_heavy_tailed():
+    spec = TRAFFIC_SPECS["fb_hadoop"]
+    s = np.asarray(sample_flow_sizes(jax.random.PRNGKey(0), spec, 100_000))
+    assert (s > 0).all()
+    assert np.median(s) < 10_000            # mice dominate
+    assert np.quantile(s, 0.995) > 100_000  # elephants exist
