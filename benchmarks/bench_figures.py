@@ -159,6 +159,19 @@ def bench_ici_gating(report):
                    f"decode-cell avg sched savings={a:.3f}")
 
 
+def bench_sweep_throughput(report):
+    """Batched sweep engine canary: scen-ticks/s on a small grid (the
+    full serial-vs-batched comparison lives in benchmarks/bench_sweep.py)."""
+    from repro.core.simulator import sweep_grid, run_sweep
+    ticks, t0 = 1_000, time.time()
+    batch = sweep_grid(traces=("fb_hadoop", "microsoft"))   # 4 scenarios
+    run_sweep(batch, ticks)
+    dt = time.time() - t0
+    report("sweep_throughput", dt,
+           f"{len(batch)} scenarios x {ticks} ticks, one compile; "
+           f"{len(batch) * ticks / dt:.0f} scen-ticks/s incl compile")
+
+
 ALL = [bench_fig1_power_breakdown, bench_fig7_traffic_cdfs,
        bench_fig8_activation, bench_fig9_energy, bench_fig10_latency,
-       bench_fig11_dc_energy, bench_ici_gating]
+       bench_fig11_dc_energy, bench_sweep_throughput, bench_ici_gating]

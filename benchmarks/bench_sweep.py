@@ -1,0 +1,102 @@
+"""Serial-vs-batched scenario-sweep benchmark (the sweep engine's
+reason to exist): runs the full Fig 9/10 evaluation grid — every
+traffic trace x {LC/DC, always-on} — once through serial ``run_sim``
+calls (which re-trace and re-jit per scenario, the pre-sweep engine's
+behaviour) and once through one batched ``run_sweep``, and reports
+scenarios/sec, scenario-ticks/sec, the wall-clock speedup, and the
+worst per-scenario metric divergence between the two paths.
+
+  PYTHONPATH=src python -m benchmarks.bench_sweep            # full grid
+  PYTHONPATH=src python -m benchmarks.bench_sweep --smoke    # <1 min canary
+
+--smoke runs a 2-trace grid at 500 ticks: a fast perf canary for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.core.simulator import (PARITY_KEYS, grid_runs, make_batch,
+                                  run_sim, run_sweep)
+from repro.core.traffic import TRAFFIC_SPECS
+
+OUT = Path(__file__).resolve().parents[1] / "results" / "bench_sweep.json"
+
+
+def _rel_diff(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(a), abs(b), 1e-9)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid, <1 min, for use as a perf canary")
+    ap.add_argument("--tol", type=float, default=1e-3,
+                    help="max allowed serial-vs-batched relative diff")
+    args = ap.parse_args()
+
+    if args.smoke:
+        traces, seeds, scales = ("fb_hadoop", "university"), (0,), (1.0,)
+        ticks = args.ticks or 800
+    else:
+        # the full Fig 9/10 evaluation matrix: every trace x {LC/DC,
+        # always-on} x seeds x utilization (rate) scales
+        traces, seeds, scales = (tuple(TRAFFIC_SPECS), (0, 1, 2, 3),
+                                 (0.6, 1.0))
+        ticks = args.ticks or 1_000
+    runs = grid_runs(traces=traces, seeds=seeds, rate_scales=scales)
+    n = len(runs)
+    print(f"grid: {len(traces)} traces x {{lcdc, base}} x {len(seeds)} "
+          f"seeds x {len(scales)} utilizations = {n} scenarios, "
+          f"{ticks} ticks each")
+
+    t0 = time.time()
+    batch = make_batch(runs)
+    batched = run_sweep(batch, ticks)
+    t_batched = time.time() - t0
+    print(f"batched run_sweep : {t_batched:8.2f} s  "
+          f"({n / t_batched:6.2f} scen/s, "
+          f"{n * ticks / t_batched:9.0f} scen-ticks/s)")
+
+    t0 = time.time()
+    serial = [run_sim(p, ticks, s) for p, s in runs]
+    t_serial = time.time() - t0
+    print(f"serial run_sim x{n}: {t_serial:8.2f} s  "
+          f"({n / t_serial:6.2f} scen/s, "
+          f"{n * ticks / t_serial:9.0f} scen-ticks/s)")
+
+    speedup = t_serial / t_batched
+    worst_key, worst = None, 0.0
+    for r_s, r_b in zip(serial, batched):
+        for k in PARITY_KEYS:
+            d = _rel_diff(r_s[k], r_b[k])
+            if d > worst:
+                worst_key, worst = f"{r_b['label']}:{k}", d
+    ok = worst <= args.tol
+    print(f"speedup: {speedup:.2f}x  "
+          f"(target >= 3x on the full grid)")
+    print(f"max serial-vs-batched rel diff: {worst:.2e} "
+          f"[{worst_key}] {'OK' if ok else f'> tol {args.tol:g}'}")
+
+    out = OUT.with_name("bench_sweep_smoke.json") if args.smoke else OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "smoke": args.smoke, "ticks": ticks, "scenarios": n,
+        "t_serial_s": round(t_serial, 3),
+        "t_batched_s": round(t_batched, 3),
+        "speedup": round(speedup, 3),
+        "scen_ticks_per_s_batched": round(n * ticks / t_batched, 1),
+        "scen_ticks_per_s_serial": round(n * ticks / t_serial, 1),
+        "max_rel_diff": worst, "max_rel_diff_key": worst_key,
+        "metrics_match": ok,
+    }, indent=1))
+    print(f"written: {out}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

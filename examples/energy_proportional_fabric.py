@@ -6,8 +6,7 @@ step's ICI traffic (from the dry-run artifacts, if present).
 """
 from repro.core import ici_gating
 from repro.core.node_model import default_timing
-from repro.core.simulator import SimParams, run_sim
-from repro.core.traffic import TRAFFIC_SPECS
+from repro.core.simulator import run_sweep, sweep_grid
 
 
 def main():
@@ -18,9 +17,8 @@ def main():
           f"(slack {t.slack_ns:.0f} ns)")
 
     print("\n=== data-center fabric (Fig 2 site, fb_hadoop, 30k us) ===")
-    lc = run_sim(SimParams(spec=TRAFFIC_SPECS["fb_hadoop"]), 30_000)
-    base = run_sim(SimParams(spec=TRAFFIC_SPECS["fb_hadoop"],
-                             gating_enabled=False), 30_000)
+    # LC/DC + always-on baseline as one 2-scenario batched sweep
+    lc, base = run_sweep(sweep_grid(traces=("fb_hadoop",)), 30_000)
     print(f"switch-tier transceiver savings: "
           f"{lc['switch_energy_savings_frac']:.1%}")
     print(f"latency: {lc['mean_latency_us']:.2f} us vs "

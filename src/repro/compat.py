@@ -1,0 +1,32 @@
+"""Version compatibility for the narrow set of new-jax APIs this repo
+uses, so the same source runs on the container's older jax as well.
+
+* shard_map: ``jax.shard_map`` (new) vs ``jax.experimental.shard_map``
+  (old; ``check_vma`` was named ``check_rep``).
+* tpu_compiler_params: ``pltpu.CompilerParams`` (new) vs
+  ``pltpu.TPUCompilerParams`` (old). Resolved lazily so shard_map
+  consumers (models, distributed) never pull in Pallas-TPU.
+* set_mesh lives in launch/mesh.py (kept there: importing that module
+  must not touch jax device state).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def tpu_compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

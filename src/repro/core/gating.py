@@ -43,14 +43,45 @@ def gate_init(n_switches: int, n_links: int) -> GateState:
                      powered)
 
 
+def usable_links(stage: jnp.ndarray, draining: jnp.ndarray,
+                 n_links: int) -> jnp.ndarray:
+    """(S, L) bool: links a scheduler may enqueue to this tick.
+
+    The single definition of "usable" shared by the gate controller, the
+    pure-jnp switch-tick oracle (kernels/ref.py) and the Pallas switch
+    kernel: links [0, stage) minus a draining top link (which still
+    serves its backlog but accepts no new packets; stage 1 never drains).
+    """
+    idx = jnp.arange(n_links)[None, :]
+    usable = idx < stage[:, None]
+    top = idx == (stage[:, None] - 1)
+    usable &= ~(draining[:, None] & top & (stage[:, None] > 1))
+    return usable
+
+
 def active_mask(state: GateState, n_links: int) -> jnp.ndarray:
     """(S, L) bool: links the scheduler may use this tick."""
-    idx = jnp.arange(n_links)[None, :]
-    usable = idx < state.stage[:, None]
-    # a draining top link no longer accepts new packets
-    top = idx == (state.stage[:, None] - 1)
-    usable &= ~(state.draining[:, None] & top & (state.stage[:, None] > 1))
-    return usable
+    return usable_links(state.stage, state.draining, n_links)
+
+
+def watermark_triggers(queues: jnp.ndarray, stage: jnp.ndarray,
+                       *, cap: float, hi: float, lo: float):
+    """Shared hi/lo backlog-monitor definition (Sec III-B).
+
+    queues: (S, L) per-port monitored backlogs. Returns (hi_trig, lo_trig)
+    bool (S,). Used by gate_step and by the switch-tick kernels so the
+    watermark semantics cannot drift between the controller and the
+    datapath. cap/hi/lo may each be scalar or per-switch (S,).
+    """
+    def per_switch(v):
+        v = jnp.asarray(v)
+        return v[:, None] if v.ndim == 1 else v   # broadcast over ports
+    cap, hi, lo = per_switch(cap), per_switch(hi), per_switch(lo)
+    idx = jnp.arange(queues.shape[1])[None, :]
+    act = idx < stage[:, None]
+    hi_t = jnp.any((queues > hi * cap) & act, axis=1)
+    lo_t = jnp.all(jnp.where(act, queues < lo * cap, True), axis=1)
+    return hi_t, lo_t
 
 
 def gate_step(state: GateState, queues: jnp.ndarray,
@@ -62,10 +93,9 @@ def gate_step(state: GateState, queues: jnp.ndarray,
     """One controller tick. queues: (S, L) backlogs in packets."""
     S, L = queues.shape
     idx = jnp.arange(L)[None, :]
-    act = idx < state.stage[:, None]
 
-    hi_trig = jnp.any((queues > hi * cap) & act, axis=1)
-    lo_trig = jnp.all(jnp.where(act, queues < lo * cap, True), axis=1)
+    hi_trig, lo_trig = watermark_triggers(queues, state.stage,
+                                          cap=cap, hi=hi, lo=lo)
 
     stage, up_timer, draining, off_timer, hold = (
         state.stage, state.up_timer, state.draining, state.off_timer,

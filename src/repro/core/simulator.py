@@ -20,11 +20,41 @@ Latency is measured with Little's law per queue group (mean delay =
 mean backlog / delivered rate) plus fixed per-hop wire/pipeline/stack
 latencies; the paper reports mean packet delivery latency, which this
 estimates directly.
+
+Batched multi-scenario sweeps
+-----------------------------
+Every per-scenario knob — the TrafficSpec fields, ``gating_enabled``,
+``rate_scale``, the watermarks, the anti-flap dwell, the seed — is an
+array-valued leaf of a :class:`Scenario` pytree, so one jitted
+``lax.scan`` step is ``vmap``-ped over an arbitrary batch of scenarios:
+
+    batch = sweep_grid(traces=("fb_hadoop", "fb_web"), seeds=(0, 1))
+    results = run_sweep(batch, n_ticks=100_000)   # list of metric dicts
+
+One-compile contract: ``run_sweep`` compiles exactly once per
+(site topology, batch size, chunk length) — re-running the same-shaped
+sweep with different knob values (traces, watermarks, seeds, ...) reuses
+the cached executable; ``TRACE_COUNT`` counts step traces so tests can
+pin this. Long runs are chunked (``chunk_ticks``, default 10k): the
+jitted chunk donates its carry on accelerator backends and at every
+chunk boundary the per-scenario accumulators are folded into float64
+host accumulators and zeroed on device, bounding both scan memory and
+float32 accumulation error.
+
+The per-switch scheduling/enqueue/serve/watermark block of the hot loop
+runs through ``ops.switch_step`` — the Pallas kernel on TPU, its
+pure-jnp oracle (kernels/ref.py) on CPU — so the simulator and the
+kernel share one switch-tick definition.
+
+``run_sim`` (one scenario) is kept for unit runs and ablations; it
+re-traces per call exactly like the pre-sweep engine, so serial loops
+over scenarios pay compile each time — use ``run_sweep`` for sweeps.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +64,8 @@ from repro.core import constants as C
 from repro.core import gating
 from repro.core.topology import FBSite
 from repro.core.traffic import (TRAFFIC_SPECS, TrafficSpec,
-                                rack_flow_rate_per_tick)
+                                rack_flow_rate_per_tick, stack_specs)
+from repro.kernels import ops
 
 F_SLOTS = 64              # concurrent flow slots per rack
 NODE_IDLE_TICKS = 50      # server-link idle timeout (us)
@@ -42,6 +73,49 @@ RING_CAP = 8              # pkts/tick cluster ring budget
 FC_RING_CAP = 16
 WIRE_HOP_US = 0.5         # fiber + switch pipeline per hop
 STACK_US = 3.75           # TCP/IP + NIC (Sec IV-C)
+
+CHUNK_TICKS = 10_000      # default scan chunk (accumulator fold period)
+
+#: number of times the sweep step has been traced (the one-compile probe)
+TRACE_COUNT = 0
+
+#: scalar metrics that must agree between run_sim and run_sweep — the
+#: shared contract checked by tests/test_sweep.py and the
+#: benchmarks/bench_sweep.py parity canary
+PARITY_KEYS = (
+    "mean_latency_us", "injected_pkts", "delivered_pkts", "drop_frac",
+    "switch_energy_savings_frac", "rsw_link_on_frac", "csw_link_on_frac",
+    "node_link_on_frac", "transceiver_power_w", "half_off_frac",
+)
+
+
+class Scenario(NamedTuple):
+    """Per-scenario knobs as array leaves (vmap axis 0 = scenario).
+
+    Scalars per scenario; ``make_batch`` stacks them to (B,) arrays so
+    the whole batch is one pytree the jitted step closes over.
+    """
+    # traffic (TrafficSpec fields; p_spawn folds iat + rate_scale)
+    p_spawn: jax.Array          # f32: P(new flow)/rack/tick while ON
+    p_on_off: jax.Array         # f32
+    p_off_on: jax.Array         # f32
+    size_w: jax.Array           # f32 lognormal mixture weight
+    size_mu1: jax.Array         # f32
+    size_s1: jax.Array          # f32
+    size_mu2: jax.Array         # f32
+    size_s2: jax.Array          # f32
+    p_intra_rack: jax.Array     # f32
+    p_intra_cluster: jax.Array  # f32
+    pace: jax.Array             # f32
+    burst_pace_boost: jax.Array  # f32
+    elephant_pkts: jax.Array    # int32
+    elephant_pace: jax.Array    # f32
+    # controller / datapath
+    gating_enabled: jax.Array   # bool
+    queue_cap: jax.Array        # f32
+    hi: jax.Array               # f32
+    lo: jax.Array               # f32
+    dwell: jax.Array            # int32
 
 
 class SimState(NamedTuple):
@@ -72,19 +146,97 @@ class SimParams:
     dwell: int = C.STAGE_DWELL_TICKS
 
 
-def _init_state(params: SimParams, key) -> SimState:
-    s = params.site
+@dataclass(frozen=True)
+class ScenarioBatch:
+    """A stack of scenarios sharing one site topology (one compile)."""
+    scen: Scenario             # leaves shape (B,)
+    site: FBSite
+    names: tuple               # trace name per scenario
+    labels: tuple              # unique human label per scenario
+    gating: tuple              # python bools (for metric finalization)
+    seeds: tuple
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+
+def make_batch(runs: Sequence[tuple[SimParams, int]]) -> ScenarioBatch:
+    """Stack (SimParams, seed) pairs into one vmappable ScenarioBatch."""
+    assert runs, "empty scenario batch"
+    site = runs[0][0].site
+    assert all(p.site == site for p, _ in runs), \
+        "one ScenarioBatch = one site topology (one compile)"
+    params = [p for p, _ in runs]
+    tf = stack_specs([p.spec for p in params])
+
+    def f32(xs):
+        return jnp.asarray(xs, jnp.float32)
+
+    scen = Scenario(
+        p_spawn=f32([min(rack_flow_rate_per_tick(p.spec,
+                                                 site.servers_per_rack)
+                         * p.rate_scale, 1.0) for p in params]),
+        p_on_off=f32(tf["p_on_off"]), p_off_on=f32(tf["p_off_on"]),
+        size_w=f32(tf["size_w"]),
+        size_mu1=f32(tf["size_mu1"]), size_s1=f32(tf["size_s1"]),
+        size_mu2=f32(tf["size_mu2"]), size_s2=f32(tf["size_s2"]),
+        p_intra_rack=f32(tf["p_intra_rack"]),
+        p_intra_cluster=f32(tf["p_intra_cluster"]),
+        pace=f32(tf["pace"]),
+        burst_pace_boost=f32(tf["burst_pace_boost"]),
+        elephant_pkts=jnp.asarray(tf["elephant_pkts"], jnp.int32),
+        elephant_pace=f32(tf["elephant_pace"]),
+        gating_enabled=jnp.asarray([p.gating_enabled for p in params],
+                                   bool),
+        queue_cap=f32([p.queue_cap for p in params]),
+        hi=f32([p.hi for p in params]), lo=f32([p.lo for p in params]),
+        dwell=jnp.asarray([p.dwell for p in params], jnp.int32))
+    labels = tuple(
+        f"{p.spec.name}|{'lcdc' if p.gating_enabled else 'base'}"
+        f"|x{p.rate_scale:g}|s{seed}" for p, seed in runs)
+    return ScenarioBatch(
+        scen=scen, site=site,
+        names=tuple(p.spec.name for p, _ in runs), labels=labels,
+        gating=tuple(bool(p.gating_enabled) for p, _ in runs),
+        seeds=tuple(int(s) for _, s in runs))
+
+
+def grid_runs(traces=None, gating=(True, False), seeds=(0,),
+              rate_scales=(1.0,), site: FBSite = FBSite(),
+              **params_kw) -> list:
+    """(SimParams, seed) pairs for the standard scenario grid: traces x
+    {LC/DC, always-on} x utilization (rate) scales x seeds — the
+    Fig 9/10 evaluation matrix. The single definition of that grid,
+    shared by sweep_grid and the serial/batched benchmark."""
+    if traces is None:       # explicit () stays empty (make_batch rejects)
+        traces = tuple(TRAFFIC_SPECS)
+    return [(SimParams(spec=TRAFFIC_SPECS[t], site=site, gating_enabled=g,
+                       rate_scale=rs, **params_kw), s)
+            for t in traces
+            for g in gating for rs in rate_scales for s in seeds]
+
+
+def sweep_grid(traces=None, gating=(True, False), seeds=(0,),
+               rate_scales=(1.0,), site: FBSite = FBSite(),
+               **params_kw) -> ScenarioBatch:
+    """The standard scenario grid as one vmappable batch."""
+    return make_batch(grid_runs(traces, gating, seeds, rate_scales, site,
+                                **params_kw))
+
+
+def _init_state(site: FBSite, scen: Scenario, key) -> SimState:
+    s = site
     R, L = s.n_racks, s.rsw_uplinks
     NC, RPC, NF = s.n_csw, s.racks_per_cluster, s.n_fc
-    rsw_gate = gating.gate_init(R, L)
-    csw_gate = gating.gate_init(NC, s.csw_uplinks)
-    if not params.gating_enabled:
-        full = jnp.full((R,), L, jnp.int32)
-        rsw_gate = rsw_gate._replace(
-            stage=full, powered=jnp.ones((R, L), bool))
-        csw_gate = csw_gate._replace(
-            stage=jnp.full((NC,), s.csw_uplinks, jnp.int32),
-            powered=jnp.ones((NC, s.csw_uplinks), bool))
+    g = scen.gating_enabled
+
+    def tier_gate(n, links):
+        # gating on: stage floor 1; off: every link up and pinned there
+        base = gating.gate_init(n, links)
+        stage = jnp.where(g, base.stage, jnp.int32(links))
+        powered = jnp.where(g, base.powered, True)
+        return base._replace(stage=stage, powered=powered)
+
     acc = {
         "rsw_backlog": jnp.zeros(()), "rsw_served": jnp.zeros(()),
         "csw_up_backlog": jnp.zeros(()), "csw_up_served": jnp.zeros(()),
@@ -108,84 +260,82 @@ def _init_state(params: SimParams, key) -> SimState:
         csw_up_q=jnp.zeros((NC, s.csw_uplinks)),
         csw_down_q=jnp.zeros((NC, RPC)),
         fc_down_q=jnp.zeros((NF, NC)),
-        rsw_gate=rsw_gate, csw_gate=csw_gate,
+        rsw_gate=tier_gate(R, L),
+        csw_gate=tier_gate(NC, s.csw_uplinks),
         node_on=jnp.zeros((R,)),
         acc=acc,
     )
 
 
-def _spawn_flows(params: SimParams, key, burst_on, flow_rem, flow_dest,
-                 flow_fast):
+def _spawn_flows(site: FBSite, scen: Scenario, key, burst_on, flow_rem,
+                 flow_dest, flow_fast):
     """Per-rack flow arrivals: Bernoulli spawn into the first free slot."""
-    spec = params.spec
-    R = params.site.n_racks
+    R = site.n_racks
     k1, k2, k3, k4 = jax.random.split(key, 4)
 
     # ON/OFF burst Markov
-    stay_on = jax.random.uniform(k1, (R,)) > spec.p_on_off
-    wake = jax.random.uniform(k2, (R,)) < spec.p_off_on
+    stay_on = jax.random.uniform(k1, (R,)) > scen.p_on_off
+    wake = jax.random.uniform(k2, (R,)) < scen.p_off_on
     burst_on = jnp.where(burst_on, stay_on, wake)
 
-    p_spawn = jnp.minimum(
-        rack_flow_rate_per_tick(spec, params.site.servers_per_rack)
-        * params.rate_scale, 1.0)
-    spawn = jax.random.bernoulli(k3, p_spawn, (R,)) & burst_on
+    spawn = jax.random.bernoulli(k3, scen.p_spawn, (R,)) & burst_on
 
     ks, kd = jax.random.split(k4)
     # lognormal mixture sizes -> packets (1250 B per packet)
     km1, km2, km3 = jax.random.split(ks, 3)
-    pick = jax.random.bernoulli(km1, spec.size_w, (R,))
+    pick = jax.random.bernoulli(km1, scen.size_w, (R,))
     z1 = jax.random.normal(km2, (R,))
     z2 = jax.random.normal(km3, (R,))
-    size_b = jnp.where(pick, jnp.exp(spec.size_mu1 + spec.size_s1 * z1),
-                       jnp.exp(spec.size_mu2 + spec.size_s2 * z2))
+    size_b = jnp.where(pick, jnp.exp(scen.size_mu1 + scen.size_s1 * z1),
+                       jnp.exp(scen.size_mu2 + scen.size_s2 * z2))
     size_p = jnp.maximum(jnp.ceil(size_b / 1250.0), 1.0).astype(jnp.int32)
 
     u = jax.random.uniform(kd, (R,))
-    dest = jnp.where(u < spec.p_intra_rack, 0,
-                     jnp.where(u < spec.p_intra_rack + spec.p_intra_cluster,
+    dest = jnp.where(u < scen.p_intra_rack, 0,
+                     jnp.where(u < scen.p_intra_rack + scen.p_intra_cluster,
                                1, 2)).astype(jnp.int32)
 
     free = flow_rem == 0
     first_free = jnp.argmax(free, axis=1)               # (R,)
     has_free = jnp.any(free, axis=1)
     do = spawn & has_free
-    rows = jnp.arange(R)
-    flow_rem = flow_rem.at[rows, first_free].add(
-        jnp.where(do, size_p, 0))
-    flow_dest = flow_dest.at[rows, first_free].set(
-        jnp.where(do, dest, flow_dest[rows, first_free]))
-    fast = size_p >= spec.elephant_pkts
-    flow_fast = flow_fast.at[rows, first_free].set(
-        jnp.where(do, fast, flow_fast[rows, first_free]))
+    # dense one-hot slot update instead of a scatter: vmapped scatters
+    # are slow on CPU XLA and this keeps the sweep engine's batched
+    # per-tick cost near the serial path's
+    slot = do[:, None] & (jnp.arange(F_SLOTS)[None, :]
+                          == first_free[:, None])       # (R,F)
+    flow_rem = flow_rem + jnp.where(slot, size_p[:, None], 0)
+    flow_dest = jnp.where(slot, dest[:, None], flow_dest)
+    fast = size_p >= scen.elephant_pkts
+    flow_fast = jnp.where(slot, fast[:, None], flow_fast)
     return burst_on, flow_rem, flow_dest, flow_fast
 
 
-def make_sim_step(params: SimParams):
-    s = params.site
+def make_sim_step(site: FBSite):
+    """One tick for ONE scenario; all scenario knobs are traced scalars,
+    so jax.vmap(step) batches arbitrarily many scenarios per compile."""
+    s = site
     R, L = s.n_racks, s.rsw_uplinks
     NC, RPC, NF = s.n_csw, s.racks_per_cluster, s.n_fc
     CPC = s.csw_per_cluster
     n_clusters = s.n_clusters
 
-    def step(state: SimState, _):
+    def step(scen: Scenario, state: SimState) -> SimState:
         acc = dict(state.acc)
         key, k_spawn, k_pace = jax.random.split(state.key, 3)
 
         # 1. traffic edge ------------------------------------------------
         burst_on, flow_rem, flow_dest, flow_fast = _spawn_flows(
-            params, k_spawn, state.burst_on, state.flow_rem,
+            site, scen, k_spawn, state.burst_on, state.flow_rem,
             state.flow_dest, state.flow_fast)
         active = flow_rem > 0                                   # (R,F)
         # paced emission: mice trickle below line rate (boosted during
         # bursts); elephants transmit at line rate -- overlapping
         # elephants are what push queues over the high watermark.
         pace_eff = jnp.minimum(
-            params.spec.pace * jnp.where(burst_on,
-                                         params.spec.burst_pace_boost, 1.0),
+            scen.pace * jnp.where(burst_on, scen.burst_pace_boost, 1.0),
             1.0)[:, None]
-        pace_flow = jnp.where(flow_fast,
-                              params.spec.elephant_pace, pace_eff)
+        pace_flow = jnp.where(flow_fast, scen.elephant_pace, pace_eff)
         emit = active & (jax.random.uniform(k_pace, active.shape)
                          < pace_flow)
         n_holding = jnp.sum(active, axis=1).astype(jnp.float32)  # (R,)
@@ -196,35 +346,20 @@ def make_sim_step(params: SimParams):
         acc["injected"] += jnp.sum(by_dest[:, 1:])
         acc["intra_rack"] += jnp.sum(by_dest[:, 0])
 
-        # 2. RSW enqueue: min-backlog active uplink ----------------------
-        rsw_q = state.rsw_q
-        usable = gating.active_mask(state.rsw_gate, L)           # (R,L)
-        q_tot = jnp.sum(rsw_q, axis=2)
-        masked = jnp.where(usable, q_tot, jnp.inf)
-        pick = jnp.argmin(masked, axis=1)                        # (R,)
-        rows = jnp.arange(R)
-        add = by_dest[:, 1:]                                     # (R,2)
-        room = jnp.maximum(params.queue_cap - q_tot[rows, pick], 0.0)
-        scale = jnp.minimum(1.0, room / jnp.maximum(add.sum(1), 1e-9))
-        acc["drops"] += jnp.sum(add.sum(1) * (1 - scale))
-        rsw_q = rsw_q.at[rows, pick].add(add * scale[:, None])
-
-        # 3. RSW serve 1 pkt/tick per powered-active uplink --------------
-        srv_mask = usable | (  # a draining link still drains its queue
-            (jnp.arange(L)[None, :] == state.rsw_gate.stage[:, None] - 1)
-            & state.rsw_gate.draining[:, None])
-        q_tot = jnp.sum(rsw_q, axis=2)
-        serve = jnp.minimum(q_tot, 1.0) * srv_mask               # (R,L)
-        frac = serve / jnp.maximum(q_tot, 1e-9)
-        served_split = rsw_q * frac[..., None]                   # (R,L,2)
-        rsw_q = rsw_q - served_split
-        acc["rsw_backlog"] += jnp.sum(q_tot)
-        acc["rsw_served"] += jnp.sum(serve)
+        # 2+3. RSW datapath tick: min-backlog enqueue of the [intra,
+        # inter] arrival split + 1 pkt/tick serve per active uplink —
+        # the shared switch-step kernel (Pallas on TPU, ref on CPU).
+        rsw_q, served_split, _, _, rsw_drop = ops.switch_step(
+            state.rsw_q, state.rsw_gate.stage, by_dest[:, 1:],
+            state.rsw_gate.draining, cap=scen.queue_cap, hi=scen.hi,
+            lo=scen.lo, serve_rate=1.0)
+        acc["drops"] += jnp.sum(rsw_drop)
+        acc["rsw_backlog"] += jnp.sum(rsw_q) + jnp.sum(served_split)
+        acc["rsw_served"] += jnp.sum(served_split)
 
         # uplink l of rack r lands on CSW (cluster(r), l)
         srv_rc = served_split.reshape(n_clusters, RPC, L, 2)
         to_csw = jnp.sum(srv_rc, axis=1)                         # (ncl,L,2)
-        intra_in = to_csw[..., 0].reshape(NC)                    # (NC,)
         inter_in = to_csw[..., 1].reshape(NC)
 
         # Stage-aware down-plane weights (the per-stage CAM tables of
@@ -249,24 +384,13 @@ def make_sim_step(params: SimParams):
         same_plane = jnp.sum(jnp.minimum(up_share, mean_down), axis=1)
         acc["ring_pkts"] += jnp.sum(intra_cl * (1.0 - same_plane))
 
-        # inter-cluster -> CSW uplinks (min-backlog among active stages)
-        csw_usable = gating.active_mask(state.csw_gate, s.csw_uplinks)
-        cmask = jnp.where(csw_usable, state.csw_up_q, jnp.inf)
-        cpick = jnp.argmin(cmask, axis=1)                        # (NC,)
-        crows = jnp.arange(NC)
-        croom = jnp.maximum(params.queue_cap
-                            - state.csw_up_q[crows, cpick], 0.0)
-        cscale = jnp.minimum(1.0, croom / jnp.maximum(inter_in, 1e-9))
-        acc["drops"] += jnp.sum(inter_in * (1 - cscale))
-        csw_up_q = state.csw_up_q.at[crows, cpick].add(inter_in * cscale)
-
-        # 5. CSW uplink serve (40G: 4 pkt/tick) -> FC --------------------
-        csrv_mask = csw_usable | (
-            (jnp.arange(s.csw_uplinks)[None, :]
-             == state.csw_gate.stage[:, None] - 1)
-            & state.csw_gate.draining[:, None])
-        cserve = jnp.minimum(csw_up_q, 4.0) * csrv_mask          # (NC,L)
-        csw_up_q = csw_up_q - cserve
+        # 5. CSW uplink datapath tick (40G: 4 pkt/tick) -> FC, through
+        # the same shared switch-step kernel (single component).
+        csw_up_q, cserve, _, _, csw_drop = ops.switch_step(
+            state.csw_up_q, state.csw_gate.stage, inter_in,
+            state.csw_gate.draining, cap=scen.queue_cap, hi=scen.hi,
+            lo=scen.lo, serve_rate=4.0)
+        acc["drops"] += jnp.sum(csw_drop)
         acc["csw_up_backlog"] += jnp.sum(state.csw_up_q)
         acc["csw_up_served"] += jnp.sum(cserve)
 
@@ -346,19 +470,25 @@ def make_sim_step(params: SimParams):
         # its uplink queues with the CSW down-queue pressure on each
         # plane-to-rack link, and the CSW trigger combines its FC uplink
         # queues with the FC down-queue pressure per plane (a saturated
-        # 40G down plane must open the next stage).
-        rsw_gate, csw_gate = state.rsw_gate, state.csw_gate
-        if params.gating_enabled:
-            down_rc = csw_down_q.reshape(n_clusters, CPC, RPC) \
-                .transpose(0, 2, 1).reshape(R, CPC)          # (R, planes)
-            rsw_gate = gating.gate_step(
-                rsw_gate, jnp.maximum(jnp.sum(rsw_q, axis=2), down_rc),
-                cap=params.queue_cap, hi=params.hi, lo=params.lo,
-                dwell=params.dwell)
-            csw_gate = gating.gate_step(
-                csw_gate, jnp.maximum(csw_up_q, fc_down_q.T),
-                cap=params.queue_cap, hi=params.hi, lo=params.lo,
-                dwell=params.dwell)
+        # 40G down plane must open the next stage). gating_enabled is a
+        # traced scenario knob: the controller always steps and the
+        # result is selected, so LC/DC and always-on scenarios share one
+        # compiled program.
+        down_rc = csw_down_q.reshape(n_clusters, CPC, RPC) \
+            .transpose(0, 2, 1).reshape(R, CPC)              # (R, planes)
+        rsw_gated = gating.gate_step(
+            state.rsw_gate, jnp.maximum(jnp.sum(rsw_q, axis=2), down_rc),
+            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell)
+        csw_gated = gating.gate_step(
+            state.csw_gate, jnp.maximum(csw_up_q, fc_down_q.T),
+            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell)
+
+        def sel(new, old):
+            return jax.tree.map(
+                lambda a, b: jnp.where(scen.gating_enabled, a, b), new, old)
+
+        rsw_gate = sel(rsw_gated, state.rsw_gate)
+        csw_gate = sel(csw_gated, state.csw_gate)
 
         rsw_pow = jnp.sum(rsw_gate.powered)
         csw_pow = jnp.sum(csw_gate.powered)
@@ -367,29 +497,85 @@ def make_sim_step(params: SimParams):
         frac_on = (rsw_pow + csw_pow) / float(R * L + NC * s.csw_uplinks)
         acc["half_off_ticks"] += (frac_on <= 0.5)
         bucket = jnp.clip((frac_on * 4).astype(jnp.int32), 0, 3)
-        acc["on_frac_hist"] = acc["on_frac_hist"].at[bucket].add(1.0)
+        acc["on_frac_hist"] += (jnp.arange(4) == bucket)  # one-hot, no scatter
 
-        new_state = SimState(key, burst_on, flow_rem, flow_dest, flow_fast,
-                             rsw_q, csw_up_q, csw_down_q, fc_down_q,
-                             rsw_gate, csw_gate, node_on, acc)
-        return new_state, None
+        return SimState(key, burst_on, flow_rem, flow_dest, flow_fast,
+                        rsw_q, csw_up_q, csw_down_q, fc_down_q,
+                        rsw_gate, csw_gate, node_on, acc)
 
     return step
 
 
-def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
-    """Run the site for n_ticks us; returns aggregate metrics."""
-    state = _init_state(params, jax.random.PRNGKey(seed))
-    step = make_sim_step(params)
+def _sweep_chunk_impl(site: FBSite, scen: Scenario, state: SimState,
+                      length: int) -> SimState:
+    global TRACE_COUNT
+    TRACE_COUNT += 1          # python side effect: counts traces only
+    step = make_sim_step(site)
+    vstep = jax.vmap(step)
 
-    @jax.jit
-    def go(state):
-        out, _ = jax.lax.scan(step, state, None, length=n_ticks)
-        return out
+    def tick(st, _):
+        return vstep(scen, st), None
 
-    final = go(state)
-    a = {k: np.asarray(v) for k, v in final.acc.items()}
-    s = params.site
+    out, _ = jax.lax.scan(tick, state, None, length=length)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_runner():
+    # carry donation is a no-op (warning) on CPU; enable it only where
+    # the backend supports buffer donation
+    kw = {} if jax.default_backend() == "cpu" \
+        else {"donate_argnames": ("state",)}
+    return jax.jit(_sweep_chunk_impl,
+                   static_argnames=("site", "length"), **kw)
+
+
+def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
+              chunk_ticks: int = CHUNK_TICKS) -> list[dict]:
+    """Run every scenario of ``batch`` for n_ticks us in one vmapped,
+    chunk-scanned program; returns one metrics dict per scenario (same
+    schema as ``run_sim``, plus the scenario ``label``).
+
+    Compiles once per (site, batch size, chunk length) and reuses the
+    executable across calls (see module docstring).
+    """
+    site = batch.site
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in batch.seeds])
+    state = jax.vmap(lambda sc, k: _init_state(site, sc, k))(
+        batch.scen, keys)
+
+    runner = _sweep_runner()
+
+    acc64 = None
+    chunk = max(1, min(chunk_ticks, n_ticks))
+    todo = n_ticks
+    while todo > 0:
+        length = min(chunk, todo)
+        state = runner(site, batch.scen, state, length)
+        # fold this chunk's accumulators into float64 on the host and
+        # zero them on device: bounds fp32 accumulation error and keeps
+        # long runs memory-flat
+        chunk_acc = jax.device_get(state.acc)
+        if acc64 is None:
+            acc64 = {k: np.zeros(np.shape(v), np.float64)
+                     for k, v in chunk_acc.items()}
+        for k, v in chunk_acc.items():
+            acc64[k] += np.asarray(v, np.float64)
+        state = state._replace(
+            acc=jax.tree.map(jnp.zeros_like, state.acc))
+        todo -= length
+
+    return [
+        _finalize({k: v[i] for k, v in acc64.items()}, site, n_ticks,
+                  batch.gating[i], batch.names[i], batch.labels[i])
+        for i in range(len(batch))
+    ]
+
+
+def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
+              trace: str, label: str | None = None) -> dict:
+    """Aggregate accumulators -> the paper's metrics (one scenario)."""
+    s = site
     T = float(n_ticks)
 
     # ---- latency (Little's law per tier + fixed costs) -----------------
@@ -412,7 +598,7 @@ def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
     rsw_on = float(a["rsw_powered"]) / (T * s.n_rsw_csw_links)
     csw_on = float(a["csw_powered"]) / (T * s.n_csw_fc_links)
     node_on = float(a["node_on"]) / (T * s.n_servers)
-    if not params.gating_enabled:
+    if not gating_enabled:
         node_on = rsw_on = csw_on = 1.0
 
     # Fig 9 metric: the stage-gated switch-tier transceivers (RSW-CSW and
@@ -427,8 +613,9 @@ def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
     total_w = s.total_transceiver_power_w()
 
     return {
-        "trace": params.spec.name,
-        "gating": params.gating_enabled,
+        "trace": trace,
+        "label": label or trace,
+        "gating": gating_enabled,
         "ticks": n_ticks,
         "mean_latency_us": mean_latency_us,
         "mean_wait_us": float(mean_wait),
@@ -453,16 +640,50 @@ def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
     }
 
 
+def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
+    """Run ONE scenario for n_ticks us; returns aggregate metrics.
+
+    Kept for unit runs and ablations, and deliberately preserves the
+    pre-sweep engine's behaviour: the scenario knobs are baked into the
+    trace as constants, so every distinct scenario lowers to its own
+    jaxpr and pays a fresh specialize-and-compile (no cross-scenario
+    cache reuse, no batching, no chunking). Serial loops over scenarios
+    therefore scale wall-clock with compile count — use ``run_sweep``
+    for sweeps, which traces once for the whole batch.
+    """
+    batch = make_batch([(params, seed)])
+    site = batch.site
+    # concrete 0-d leaves close over the step -> per-scenario constants
+    scen = jax.tree.map(lambda x: x[0], batch.scen)
+    state = _init_state(site, scen, jax.random.PRNGKey(seed))
+    step = make_sim_step(site)
+
+    @jax.jit
+    def go(state):
+        out, _ = jax.lax.scan(lambda st, _: (step(scen, st), None),
+                              state, None, length=n_ticks)
+        return out
+
+    acc = jax.device_get(go(state).acc)
+    return _finalize({k: np.asarray(v, np.float64) for k, v in acc.items()},
+                     site, n_ticks, batch.gating[0], batch.names[0],
+                     batch.labels[0])
+
+
 def compare_traces(n_ticks: int = 200_000, seed: int = 0,
                    traces=None) -> dict:
-    """LC/DC vs always-on across every modeled trace (Figs 8-10)."""
-    out = {}
-    for name in (traces or TRAFFIC_SPECS):
+    """LC/DC vs always-on across every modeled trace (Figs 8-10), as a
+    single batched sweep (one compile, 2x|traces| scenarios)."""
+    names = list(traces or TRAFFIC_SPECS)
+    runs = []
+    for name in names:
         spec = TRAFFIC_SPECS[name]
-        lc = run_sim(SimParams(spec=spec, gating_enabled=True),
-                     n_ticks, seed)
-        base = run_sim(SimParams(spec=spec, gating_enabled=False),
-                       n_ticks, seed)
+        runs.append((SimParams(spec=spec, gating_enabled=True), seed))
+        runs.append((SimParams(spec=spec, gating_enabled=False), seed))
+    res = run_sweep(make_batch(runs), n_ticks)
+    out = {}
+    for i, name in enumerate(names):
+        lc, base = res[2 * i], res[2 * i + 1]
         out[name] = {
             "lcdc": lc, "baseline": base,
             "switch_energy_savings": lc["switch_energy_savings_frac"],

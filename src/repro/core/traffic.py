@@ -159,6 +159,25 @@ def pearson_vs_target(samples, anchors) -> float:
     return float(num / den) if den > 0 else 0.0
 
 
+def stack_specs(specs) -> dict[str, np.ndarray]:
+    """Stack TrafficSpec fields into (B,) arrays, one row per scenario.
+
+    The batched sweep engine (core/simulator.py) turns every per-spec
+    knob into an array-valued pytree leaf so a single compiled step can
+    be vmapped over scenarios; this is the traffic half of that pytree.
+    """
+    import dataclasses
+    out: dict[str, np.ndarray] = {}
+    for f in dataclasses.fields(TrafficSpec):
+        if f.name == "name":
+            continue
+        vals = [getattr(s, f.name) for s in specs]
+        # f.type is the annotation *string* under future-annotations
+        dtype = np.int32 if f.type in (int, "int") else np.float32
+        out[f.name] = np.asarray(vals, dtype=dtype)
+    return out
+
+
 def rack_flow_rate_per_tick(spec: TrafficSpec, servers_per_rack: int = 48,
                             duty: float | None = None) -> float:
     """Expected new flows per rack per 1 us tick while the rack is ON."""

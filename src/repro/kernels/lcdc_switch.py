@@ -3,14 +3,26 @@
 The TPU-native analogue of the paper's FPGA pipeline (Sec III-B): for a
 tile of switches, one tick of
   (1) min-backlog output-queue selection over the stage-enabled ports
-      (the per-stage CAM lookup + weighted scheduler),
-  (2) arrival enqueue with capacity clamp (drop counting),
-  (3) 1-pkt/port service over enabled ports,
+      (the per-stage CAM lookup + weighted scheduler), honouring a
+      draining top port that serves but no longer accepts traffic,
+  (2) arrival enqueue with capacity clamp (drop counting) — arrivals are
+      a per-switch vector of K traffic components (the simulator's
+      [intra, inter] split), enqueued proportionally,
+  (3) up-to-serve_rate pkt/port service over active ports, split
+      proportionally across the K components,
   (4) high/low watermark trigger generation (the backlog monitor).
 
-All switches in a tile advance in one VPU-wide vector step; the sim's
-pure-jnp path (ref.switch_step) is the oracle and the CPU execution
-path; on TPU ops.switch_step dispatches here.
+All switches in a tile advance in one VPU-wide vector step; queues are
+laid out (S, L*K) so the tile stays 2-D (lane-friendly) and is reshaped
+to (bs, L, K) inside the kernel. cap/hi/lo ride in as per-switch operand
+columns rather than compile-time constants so per-scenario values (the
+batched sweep engine's array-valued knobs) trace through one compile.
+
+The switch axis is padded up to the block size and outputs sliced back,
+so odd-sized tiers (e.g. the 16-CSW tier under a 128 block) work.
+
+The sim's pure-jnp path (ref.switch_step_ref) is the oracle and the CPU
+execution path; on TPU ops.switch_step dispatches here.
 """
 from __future__ import annotations
 
@@ -23,69 +35,110 @@ from jax.experimental import pallas as pl
 BIG = 1e30
 
 
-def _kernel(q_ref, stage_ref, arr_ref, qo_ref, hi_ref, lo_ref, drop_ref, *,
-            cap: float, hi: float, lo: float, n_links: int):
-    q = q_ref[...]                                  # (bs, L)
+def _kernel(q_ref, stage_ref, drain_ref, arr_ref, cap_ref, hi_ref, lo_ref,
+            qo_ref, srv_ref, hi_o_ref, lo_o_ref, drop_ref, *,
+            n_links: int, n_comp: int, serve_rate: float):
+    L, K = n_links, n_comp
+    bs = q_ref.shape[0]
+    q = q_ref[...].reshape(bs, L, K)
     stage = stage_ref[...]                          # (bs, 1) int32
-    arr = arr_ref[...]                              # (bs, 1)
+    drain = drain_ref[...] != 0                     # (bs, 1)
+    arr = arr_ref[...]                              # (bs, K)
+    cap = cap_ref[...]                              # (bs, 1)
 
-    idx = jax.lax.broadcasted_iota(jnp.int32, q.shape, 1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bs, L), 1)
     act = idx < stage
+    top = idx == stage - 1
+    usable = act & ~(drain & top & (stage > 1))
+    qtot = jnp.sum(q, axis=2)                       # (bs, L)
 
-    # (1) min-backlog selection among active ports
-    masked = jnp.where(act, q, BIG)
+    # (1) min-backlog selection among usable ports, ties to lowest index
+    masked = jnp.where(usable, qtot, BIG)
     mn = jnp.min(masked, axis=1, keepdims=True)
-    pick = (masked == mn)
-    # break ties toward the lowest index
-    first = jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
-    pick &= first
+    pick = masked == mn
+    pick &= jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
 
-    # (2) enqueue with capacity clamp
+    # (2) enqueue with capacity clamp, proportional over components
+    add_tot = jnp.sum(arr, axis=1, keepdims=True)   # (bs, 1)
     room = jnp.maximum(cap - mn, 0.0)
-    add = jnp.minimum(arr, room)
-    drop_ref[...] = arr - add
-    q = q + pick.astype(q.dtype) * add
+    scale = jnp.minimum(1.0, room / jnp.maximum(add_tot, 1e-9))
+    drop_ref[...] = add_tot * (1.0 - scale)
+    q = q + pick.astype(q.dtype)[..., None] \
+        * (arr * scale)[:, None, :]
 
-    # (3) serve one packet per active port
-    q = jnp.maximum(q - act.astype(q.dtype), 0.0)
-    qo_ref[...] = q
+    # (3) serve up to serve_rate pkts per active port, proportional
+    qtot = jnp.sum(q, axis=2)
+    serve_tot = jnp.minimum(qtot, serve_rate) * act
+    frac = serve_tot / jnp.maximum(qtot, 1e-9)
+    served = q * frac[..., None]
+    q = q - served
+    qo_ref[...] = q.reshape(bs, L * K)
+    srv_ref[...] = served.reshape(bs, L * K)
 
-    # (4) watermark triggers
-    hi_ref[...] = jnp.any((q > hi * cap) & act, axis=1,
-                          keepdims=True).astype(jnp.int32)
-    lo_ref[...] = jnp.all(jnp.where(act, q < lo * cap, True), axis=1,
-                          keepdims=True).astype(jnp.int32)
+    # (4) watermark triggers on post-serve backlogs
+    qpost = qtot - serve_tot
+    hi_o_ref[...] = jnp.any((qpost > hi_ref[...] * cap) & act, axis=1,
+                            keepdims=True).astype(jnp.int32)
+    lo_o_ref[...] = jnp.all(jnp.where(act, qpost < lo_ref[...] * cap, True),
+                            axis=1, keepdims=True).astype(jnp.int32)
 
 
-def switch_step(queues, stage, arrivals, *, cap=20.0, hi=0.75, lo=0.22,
-                block_s=128, interpret=True):
-    """queues: (S, L) f32; stage: (S,) int32; arrivals: (S,) f32.
-    Returns (new_queues, hi_trig (S,), lo_trig (S,), dropped (S,))."""
-    S, L = queues.shape
-    bs = min(block_s, S)
-    assert S % bs == 0
-    kern = functools.partial(_kernel, cap=float(cap), hi=float(hi),
-                             lo=float(lo), n_links=L)
-    qo, hi_t, lo_t, drop = pl.pallas_call(
+def switch_step(queues, stage, arrivals, draining=None, *, cap=20.0,
+                hi=0.75, lo=0.22, serve_rate=1.0, block_s=128,
+                interpret=True):
+    """queues (S, L, K) or (S, L); stage (S,) int32; arrivals (S, K) or
+    (S,); draining (S,) bool. Same contract as ref.switch_step_ref:
+    returns (new_queues, served, hi_trig, lo_trig, dropped)."""
+    squeeze = queues.ndim == 2
+    if squeeze:
+        queues = queues[..., None]
+        arrivals = arrivals[..., None]
+    S, L, K = queues.shape
+    if draining is None:
+        draining = jnp.zeros((S,), bool)
+
+    # pad the switch axis to the block size (idle switches: stage 1,
+    # empty queues, zero arrivals) and slice the outputs back
+    bs = min(block_s, _round_up(S, 8))
+    Sp = _round_up(S, bs)
+    pad = Sp - S
+    f32 = queues.dtype
+    qp = jnp.pad(queues, ((0, pad), (0, 0), (0, 0))).reshape(Sp, L * K)
+    stage_p = jnp.pad(stage, (0, pad), constant_values=1)[:, None]
+    drain_p = jnp.pad(draining, (0, pad)).astype(jnp.int32)[:, None]
+    arr_p = jnp.pad(arrivals, ((0, pad), (0, 0)))
+    def col(v):
+        # scalar or per-switch (S,) knob -> padded (Sp, 1) operand column
+        v = jnp.asarray(v, f32)
+        if v.ndim == 0:
+            return jnp.full((Sp, 1), v)
+        return jnp.pad(v.reshape(-1), (0, pad))[:, None]
+
+    kern = functools.partial(_kernel, n_links=L, n_comp=K,
+                             serve_rate=float(serve_rate))
+    spec_lk = pl.BlockSpec((bs, L * K), lambda i: (i, 0))
+    spec_1 = pl.BlockSpec((bs, 1), lambda i: (i, 0))
+    spec_k = pl.BlockSpec((bs, K), lambda i: (i, 0))
+    qo, srv, hi_t, lo_t, drop = pl.pallas_call(
         kern,
-        grid=(S // bs,),
-        in_specs=[
-            pl.BlockSpec((bs, L), lambda i: (i, 0)),
-            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
-            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bs, L), lambda i: (i, 0)),
-            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
-            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
-            pl.BlockSpec((bs, 1), lambda i: (i, 0)),
-        ],
+        grid=(Sp // bs,),
+        in_specs=[spec_lk, spec_1, spec_1, spec_k, spec_1, spec_1, spec_1],
+        out_specs=[spec_lk, spec_lk, spec_1, spec_1, spec_1],
         out_shape=[
-            jax.ShapeDtypeStruct((S, L), queues.dtype),
-            jax.ShapeDtypeStruct((S, 1), jnp.int32),
-            jax.ShapeDtypeStruct((S, 1), jnp.int32),
-            jax.ShapeDtypeStruct((S, 1), queues.dtype),
+            jax.ShapeDtypeStruct((Sp, L * K), f32),
+            jax.ShapeDtypeStruct((Sp, L * K), f32),
+            jax.ShapeDtypeStruct((Sp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Sp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Sp, 1), f32),
         ],
         interpret=interpret,
-    )(queues, stage[:, None], arrivals[:, None])
-    return qo, hi_t[:, 0], lo_t[:, 0], drop[:, 0]
+    )(qp, stage_p, drain_p, arr_p, col(cap), col(hi), col(lo))
+    qo = qo[:S].reshape(S, L, K)
+    srv = srv[:S].reshape(S, L, K)
+    if squeeze:
+        qo, srv = qo[..., 0], srv[..., 0]
+    return qo, srv, hi_t[:S, 0], lo_t[:S, 0], drop[:S, 0]
+
+
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m

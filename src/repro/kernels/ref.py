@@ -6,13 +6,22 @@
 * attention_naive   - O(T*S) direct softmax (small shapes only).
 * wkv_ref           - sequential RWKV-6 recurrence (repro/models/rwkv6.py).
 * switch_step_ref   - one LC/DC switch tick, identical semantics to
-                      kernels/lcdc_switch.py.
+                      kernels/lcdc_switch.py. This is THE shared
+                      semantic definition of the per-switch datapath:
+                      the simulator hot loop routes through it (via
+                      ops.switch_step) on CPU, and the Pallas kernel is
+                      validated against it, so min-backlog pick /
+                      capacity clamp / serve / watermark logic lives in
+                      exactly one jnp implementation (usable-link and
+                      watermark predicates are imported from
+                      core/gating.py, the controller's own definitions).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import gating
 from repro.models.attention import chunked_attention as attention_ref  # noqa
 from repro.models.rwkv6 import wkv_scan as wkv_ref  # noqa
 
@@ -37,20 +46,67 @@ def attention_naive(q, k, v, *, causal=True, swa_window=0):
     return out.astype(v.dtype)
 
 
-def switch_step_ref(queues, stage, arrivals, *, cap=20.0, hi=0.75, lo=0.22):
-    S, L = queues.shape
-    idx = jnp.arange(L)[None, :]
-    act = idx < stage[:, None]
-    masked = jnp.where(act, queues, BIG)
+def switch_step_ref(queues, stage, arrivals, draining=None, *,
+                    cap=20.0, hi=0.75, lo=0.22, serve_rate=1.0):
+    """One switch tick for a tier of S switches with L output ports.
+
+    queues:   (S, L, K) per-port backlogs split into K traffic
+              components (e.g. K=2 for the RSW's [intra, inter] split),
+              or (S, L) for the K=1 shorthand.
+    stage:    (S,) int32 active-stage counts (ports [0, stage) enabled).
+    arrivals: (S, K) — or (S,) with 2-D queues — per-switch arrival
+              vector enqueued onto the min-backlog usable port.
+    draining: (S,) bool; a draining top port serves but does not accept.
+
+    Semantics per switch: (1) pick the usable port with the least total
+    backlog, (2) enqueue the arrival vector there, proportionally scaled
+    so the port total never exceeds ``cap`` (the clipped excess is
+    dropped), (3) serve up to ``serve_rate`` pkts/tick per active port,
+    split proportionally across the K components, (4) raise hi/lo
+    watermark triggers on the post-serve backlogs.
+
+    Returns (new_queues, served, hi_trig, lo_trig, dropped) where
+    served has the queues' shape, hi/lo are int32 (S,), dropped is (S,).
+    """
+    squeeze = queues.ndim == 2
+    if squeeze:
+        queues = queues[..., None]
+        arrivals = arrivals[..., None]
+    S, L, K = queues.shape
+    if draining is None:
+        draining = jnp.zeros((S,), bool)
+
+    act = jnp.arange(L)[None, :] < stage[:, None]
+    usable = gating.usable_links(stage, draining, L)
+    qtot = jnp.sum(queues, axis=2)                      # (S, L)
+
+    # (1) min-backlog usable port, ties to the lowest index
+    masked = jnp.where(usable, qtot, BIG)
     mn = jnp.min(masked, axis=1, keepdims=True)
     pick = masked == mn
     pick &= jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
+
+    # (2) enqueue with capacity clamp (proportional over components)
+    add_tot = jnp.sum(arrivals, axis=1)                 # (S,)
     room = jnp.maximum(cap - mn[:, 0], 0.0)
-    add = jnp.minimum(arrivals, room)
-    dropped = arrivals - add
-    q = queues + pick.astype(queues.dtype) * add[:, None]
-    q = jnp.maximum(q - act.astype(q.dtype), 0.0)
-    hi_t = jnp.any((q > hi * cap) & act, axis=1).astype(jnp.int32)
-    lo_t = jnp.all(jnp.where(act, q < lo * cap, True), axis=1) \
-        .astype(jnp.int32)
-    return q, hi_t, lo_t, dropped
+    scale = jnp.minimum(1.0, room / jnp.maximum(add_tot, 1e-9))
+    dropped = add_tot * (1.0 - scale)
+    q = queues + pick.astype(queues.dtype)[..., None] \
+        * (arrivals * scale[:, None])[:, None, :]
+
+    # (3) serve up to serve_rate pkts per active port, proportional
+    # across components (a draining top port keeps draining: it is
+    # active until the drain completes and the stage drops)
+    qtot = jnp.sum(q, axis=2)
+    serve_tot = jnp.minimum(qtot, serve_rate) * act
+    frac = serve_tot / jnp.maximum(qtot, 1e-9)
+    served = q * frac[..., None]
+    q = q - served
+
+    # (4) watermark triggers on post-serve backlogs (shared definition)
+    hi_t, lo_t = gating.watermark_triggers(qtot - serve_tot, stage,
+                                           cap=cap, hi=hi, lo=lo)
+    if squeeze:
+        q, served = q[..., 0], served[..., 0]
+    return (q, served, hi_t.astype(jnp.int32), lo_t.astype(jnp.int32),
+            dropped)

@@ -37,7 +37,7 @@ from repro.configs import (ARCH_IDS, SHAPES, cells_for, get_config,
                            input_specs)
 from repro.distributed import sharding as shd
 from repro.launch import hlo_analysis as hla
-from repro.launch.mesh import dist_for, make_production_mesh
+from repro.launch.mesh import dist_for, make_production_mesh, set_mesh
 from repro.models import model as model_lib
 from repro.optim import adafactor_init, adamw_init
 from repro.train.steps import make_decode_step, make_prefill_step, \
@@ -80,7 +80,7 @@ def lower_cell(cfg, shape, mesh, *, donate=True):
     p_specs, p_shapes = shd.param_specs(cfg, dist)
     b_specs, b_shapes = shd.batch_specs(cfg, shape, dist)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             o_specs = _opt_specs(cfg, p_specs, p_shapes, dist)
             o_shapes = _opt_shapes(cfg, p_shapes)

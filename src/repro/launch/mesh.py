@@ -12,25 +12,39 @@ state (dryrun.py must set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 spells explicit/auto sharding via AxisType
+    from jax.sharding import AxisType
+
+    def _axis_kw(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # older jax: Auto is the only (implicit) behaviour
+    def _axis_kw(n: int) -> dict:
+        return {}
 
 from repro.models.moe import DistContext
+
+try:  # jax >= 0.6
+    set_mesh = jax.set_mesh
+except AttributeError:
+    # older jax: Mesh is itself the context manager that scopes
+    # PartitionSpec resolution for jit/shard_map
+    def set_mesh(mesh):
+        return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+                             **_axis_kw(3))
+    return jax.make_mesh((data, model), ("data", "model"), **_axis_kw(2))
 
 
 def dist_for(mesh) -> DistContext:

@@ -1,0 +1,93 @@
+"""Minimal, deterministic stand-in for the `hypothesis` package.
+
+Loaded by conftest.py ONLY when the real `hypothesis` is not installed
+(see requirements-dev.txt), so the property tests still collect and run
+everywhere: each @given test is executed for `max_examples` seeded draws
+per strategy, always starting from the strategy's boundary values (the
+draws the real hypothesis shrinks toward). Supports exactly the API
+surface this repo uses: given, settings profiles, and the
+lists/floats/integers strategies.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw, boundary):
+        self._draw = draw
+        self._boundary = list(boundary)
+
+    def example_at(self, i: int, rng: random.Random):
+        if i < len(self._boundary):
+            return self._boundary[i]
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the hypothesis.strategies module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         [min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         [min_value, max_value,
+                          (min_value + max_value) / 2.0])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example_at(len(elements._boundary), rng)
+                    for _ in range(n)]
+        boundary = [[elements.example_at(i % max(len(elements._boundary),
+                                                 1), random.Random(i))
+                     for _ in range(min_size)] for i in range(2)]
+        return _Strategy(draw, boundary)
+
+
+class settings:  # noqa: N801 - mimics hypothesis.settings
+    _profiles: dict = {}
+    _active: dict = {"max_examples": 25}
+
+    def __init__(self, **kw):
+        self._kw = kw
+
+    def __call__(self, fn):       # @settings(...) decorator form
+        fn._stub_settings = self._kw
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._active = {"max_examples": 25, **cls._profiles.get(name, {})}
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        # NB: no functools.wraps — pytest follows __wrapped__ to the
+        # original signature and would treat the drawn arguments as
+        # fixtures; the wrapper must expose a zero-argument signature.
+        def wrapper():
+            # @settings may sit above @given (annotating this wrapper)
+            # or below it (annotating fn) — honour either
+            kw = getattr(wrapper, "_stub_settings", None) \
+                or getattr(fn, "_stub_settings", settings._active)
+            n = int(kw.get("max_examples", 25) or 25)
+            rng = random.Random(f"stub:{fn.__module__}.{fn.__name__}")
+            for i in range(n):
+                drawn = [s.example_at(i, rng) for s in strats]
+                drawn_kw = {k: s.example_at(i, rng)
+                            for k, s in kw_strats.items()}
+                fn(*drawn, **drawn_kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -14,7 +14,7 @@ from repro.configs import get_config, reduced
 from repro.models import model as M
 from repro.optim import make_optimizer
 from repro.train.steps import make_train_step
-from repro.launch.mesh import make_test_mesh, dist_for
+from repro.launch.mesh import make_test_mesh, dist_for, set_mesh
 from repro.distributed import sharding as shd
 
 cfg = dataclasses.replace(reduced(get_config("qwen3-8b")),
@@ -34,8 +34,12 @@ p1, o1, m1 = jax.jit(make_train_step(cfg))(params, opt, batch,
 mesh = make_test_mesh(2, 2)
 dist = dist_for(mesh)
 p_specs, _ = shd.param_specs(cfg, dist)
-with jax.set_mesh(mesh):
-    step = jax.jit(make_train_step(cfg, dist), in_shardings=(p_specs, None, None, None))
+from jax.sharding import NamedSharding, PartitionSpec
+repl = NamedSharding(mesh, PartitionSpec())   # prefix: replicate subtree
+with set_mesh(mesh):
+    step = jax.jit(make_train_step(cfg, dist),
+                   in_shardings=(shd.to_shardings(p_specs, mesh),
+                                 repl, repl, repl))
     p2, o2, m2 = step(params, opt, batch, jnp.zeros((), jnp.int32))
 assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-4, (m1["loss"], m2["loss"])
 d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
@@ -52,7 +56,7 @@ def test_moe_dist_matches_pure():
 import jax, jax.numpy as jnp, dataclasses
 from repro.configs import get_config, reduced
 from repro.models import moe as moe_mod
-from repro.launch.mesh import make_test_mesh, dist_for
+from repro.launch.mesh import make_test_mesh, dist_for, set_mesh
 
 # ep mode: 4 experts over a 2-way model axis
 cfg = dataclasses.replace(reduced(get_config("mixtral-8x7b")),
@@ -63,7 +67,7 @@ x = jax.random.normal(key, (4, 8, cfg.d_model))
 y_pure, aux_pure = moe_mod.moe_apply_pure(p, cfg, x)
 mesh = make_test_mesh(2, 2)
 dist = dist_for(mesh)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_dist, aux_dist = jax.jit(
         lambda p, x: moe_mod.moe_apply_dist(p, cfg, x, dist))(p, x)
 err = float(jnp.max(jnp.abs(y_pure - y_dist)))
@@ -82,7 +86,7 @@ from repro.configs import get_config, reduced
 from repro.models import model as M
 from repro.optim import make_optimizer
 from repro.train.steps import make_train_step
-from repro.launch.mesh import make_test_mesh, dist_for
+from repro.launch.mesh import make_test_mesh, dist_for, set_mesh
 from repro.distributed import sharding as shd
 from repro.checkpoint.checkpointer import save, restore
 
@@ -97,7 +101,7 @@ mesh_a = make_test_mesh(4, 2)
 dist_a = dist_for(mesh_a)
 batch = {{"tokens": jax.random.randint(key, (8, 16), 0, cfg.vocab),
           "targets": jax.random.randint(key, (8, 16), 0, cfg.vocab)}}
-with jax.set_mesh(mesh_a):
+with set_mesh(mesh_a):
     step = jax.jit(make_train_step(cfg, dist_a))
     p, o, m = step(state["params"], state["opt"], batch,
                    jnp.zeros((), jnp.int32))
@@ -110,7 +114,7 @@ p_specs, p_shapes = shd.param_specs(cfg, dist_b)
 shardings = {{"params": shd.to_shardings(p_specs, mesh_b), "opt": None}}
 state_b, got_step = restore(r"{tmp_path}", {{"params": p, "opt": o}})
 assert got_step == 1
-with jax.set_mesh(mesh_b):
+with set_mesh(mesh_b):
     step_b = jax.jit(make_train_step(cfg, dist_b))
     p2, o2, m2 = step_b(state_b["params"], state_b["opt"], batch,
                         jnp.zeros((), jnp.int32) + 1)
@@ -125,11 +129,9 @@ def test_pipeline_parallel_executor():
     out = run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.distributed.pipeline import pipeline_apply
-from jax.sharding import AxisType
 
 n_stages = 4
-mesh = jax.make_mesh((n_stages,), ("stage",),
-                     axis_types=(AxisType.Auto,))
+mesh = jax.make_mesh((n_stages,), ("stage",))
 key = jax.random.PRNGKey(0)
 Ws = jax.random.normal(key, (n_stages, 16, 16)) * 0.3
 

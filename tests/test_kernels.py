@@ -81,8 +81,11 @@ def test_wkv_chunked_vs_sequential(case):
                                rtol=tol)
 
 
+# odd S (16, 100) exercises the switch-axis padding: tiers need not be
+# a multiple of the block (e.g. the 16-CSW tier under a 128 block)
 @pytest.mark.parametrize("S,L,block", [(128, 4, 64), (256, 4, 128),
-                                       (128, 8, 128)])
+                                       (128, 8, 128), (16, 4, 128),
+                                       (100, 4, 64)])
 def test_switch_step_vs_ref(S, L, block):
     key = jax.random.PRNGKey(3)
     ks = jax.random.split(key, 3)
@@ -91,9 +94,60 @@ def test_switch_step_vs_ref(S, L, block):
     arr = jax.random.uniform(ks[2], (S,)) * 3
     a = switch_step(q, stage, arr, block_s=block)
     b = ref.switch_step_ref(q, stage, arr)
+    assert len(a) == len(b) == 5
     for x, y in zip(a, b):
         np.testing.assert_allclose(np.asarray(x, np.float32),
                                    np.asarray(y, np.float32), atol=1e-6)
+
+
+# the extended datapath the simulator hot loop uses: K-component queues
+# ([intra, inter] split), per-switch arrival vectors, draining top
+# ports, multi-pkt serve rates, and non-default cap/watermarks
+@pytest.mark.parametrize("S,L,K,serve_rate,block",
+                         [(128, 4, 2, 1.0, 64), (16, 4, 2, 1.0, 128),
+                          (64, 4, 1, 4.0, 32), (96, 8, 3, 2.0, 64)])
+def test_switch_step_components_vs_ref(S, L, K, serve_rate, block):
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.uniform(ks[0], (S, L, K)) * 15
+    stage = jax.random.randint(ks[1], (S,), 1, L + 1)
+    arr = jax.random.uniform(ks[2], (S, K)) * 2
+    drain = jax.random.bernoulli(ks[3], 0.4, (S,))
+    kw = dict(cap=17.0, hi=0.6, lo=0.3, serve_rate=serve_rate)
+    a = switch_step(q, stage, arr, drain, block_s=block, **kw)
+    b = ref.switch_step_ref(q, stage, arr, drain, **kw)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-6)
+
+
+def test_switch_step_per_switch_cap_vs_ref():
+    """cap may be a per-switch array; must survive the padded block."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    S, L = 100, 4
+    q = jax.random.uniform(ks[0], (S, L)) * 20
+    stage = jax.random.randint(ks[1], (S,), 1, L + 1)
+    arr = jax.random.uniform(ks[2], (S,)) * 3
+    cap = jnp.linspace(10.0, 25.0, S)
+    a = switch_step(q, stage, arr, cap=cap, block_s=128)
+    b = ref.switch_step_ref(q, stage, arr, cap=cap)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-6)
+
+
+def test_switch_step_drain_blocks_enqueue_but_serves():
+    """A draining top port must keep serving its backlog while new
+    arrivals go to the remaining usable ports."""
+    q = jnp.array([[5.0, 9.0]])[..., None]            # (1, 2, 1)
+    stage = jnp.array([2], jnp.int32)
+    arr = jnp.array([[3.0]])
+    drain = jnp.array([True])
+    nq, served, _, _, drop = ref.switch_step_ref(q, stage, arr, drain,
+                                                 cap=20.0)
+    # arrival lands on port 0 (only usable), port 1 still drains 1 pkt
+    np.testing.assert_allclose(np.asarray(nq[0, :, 0]), [7.0, 8.0])
+    np.testing.assert_allclose(np.asarray(served[0, :, 0]), [1.0, 1.0])
+    assert float(drop[0]) == 0.0
 
 
 def test_wkv_kernel_plugs_into_model():

@@ -44,7 +44,7 @@ def test_decode_sp_matches_plain_decode():
 import dataclasses, jax, jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.models import model as M
-from repro.launch.mesh import make_test_mesh, dist_for
+from repro.launch.mesh import make_test_mesh, dist_for, set_mesh
 
 cfg0 = reduced(get_config("qwen3-8b"))
 mesh = make_test_mesh(2, 2)
@@ -66,7 +66,7 @@ def merge(dst, src):
 cache = jax.tree.map(merge, cache_full, cache)
 pos = jnp.full((B,), T-1, jnp.int32)
 cfg_sp = dataclasses.replace(cfg0, decode_sp=True)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     logits_sp, c2 = jax.jit(lambda p, c, t, po: M.decode_step(
         cfg_sp, p, c, t, po, dist))(params, cache, toks[:, -1:], pos)
 err = float(jnp.max(jnp.abs(logits_sp - logits_full)))
@@ -85,7 +85,7 @@ def test_moe_psum_scatter_combine_matches():
 import dataclasses, jax, jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.models import moe as moe_mod
-from repro.launch.mesh import make_test_mesh, dist_for
+from repro.launch.mesh import make_test_mesh, dist_for, set_mesh
 
 cfg = dataclasses.replace(reduced(get_config("jamba-v0.1-52b")),
                           capacity_factor=8.0)
@@ -96,7 +96,7 @@ y_ref, _ = moe_mod.moe_apply_pure(p, cfg, x)
 mesh = make_test_mesh(2, 2)
 dist = dist_for(mesh)
 cfg_ps = dataclasses.replace(cfg, moe_combine="psum_scatter")
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y_ps, _ = jax.jit(
         lambda p, x: moe_mod.moe_apply_dist(p, cfg_ps, x, dist))(p, x)
 err = float(jnp.max(jnp.abs(y_ref - y_ps)))

@@ -1,0 +1,81 @@
+"""Batched multi-scenario sweep engine: parity with the serial path and
+the one-compile contract."""
+import pytest
+
+from repro.core import simulator as S
+from repro.core.traffic import TRAFFIC_SPECS
+
+TICKS = 1_500
+PARITY_KEYS = S.PARITY_KEYS
+
+
+@pytest.fixture(scope="module")
+def grid():
+    """2 traces x {gating on/off} x 2 seeds = 8 scenarios."""
+    return [(S.SimParams(spec=TRAFFIC_SPECS[t], gating_enabled=g), seed)
+            for t in ("fb_hadoop", "university")
+            for g in (True, False)
+            for seed in (0, 1)]
+
+
+@pytest.fixture(scope="module")
+def sweep_results(grid):
+    return S.run_sweep(S.make_batch(grid), TICKS)
+
+
+def test_sweep_matches_serial_run_sim(grid, sweep_results):
+    for (params, seed), batched in zip(grid, sweep_results):
+        serial = S.run_sim(params, TICKS, seed)
+        for k in PARITY_KEYS:
+            a, b = serial[k], batched[k]
+            assert abs(a - b) <= 1e-3 * max(abs(a), abs(b), 1e-9), \
+                (batched["label"], k, a, b)
+
+
+def test_sweep_scenarios_are_independent(sweep_results):
+    """Scenario knobs must not leak across the batch axis: gated and
+    always-on scenarios of the same trace/seed share traffic but not
+    energy behaviour."""
+    by_label = {r["label"]: r for r in sweep_results}
+    lc = by_label["fb_hadoop|lcdc|x1|s0"]
+    base = by_label["fb_hadoop|base|x1|s0"]
+    assert base["switch_energy_savings_frac"] == 0.0
+    assert 0.05 <= lc["switch_energy_savings_frac"] <= 0.75
+    # distinct seeds must give distinct traffic
+    assert (by_label["fb_hadoop|lcdc|x1|s0"]["injected_pkts"]
+            != by_label["fb_hadoop|lcdc|x1|s1"]["injected_pkts"])
+
+
+def test_sweep_compiles_once():
+    """The one-compile contract: same-shaped sweeps with different knob
+    values (traces, watermarks, seeds) reuse one traced program, and
+    chunking does not add traces."""
+    batch_a = S.sweep_grid(traces=("fb_hadoop", "fb_web"), seeds=(0,))
+    batch_b = S.sweep_grid(traces=("microsoft", "university"), seeds=(3,),
+                           hi=0.5, lo=0.1)
+    n0 = S.TRACE_COUNT
+    S.run_sweep(batch_a, 400, chunk_ticks=200)   # 2 chunks, 1 trace
+    n1 = S.TRACE_COUNT
+    assert n1 - n0 == 1
+    S.run_sweep(batch_b, 600, chunk_ticks=200)   # same shapes: 0 traces
+    assert S.TRACE_COUNT == n1
+
+
+def test_chunked_matches_unchunked():
+    """Accumulator folding at chunk boundaries must not change metrics."""
+    batch = S.sweep_grid(traces=("fb_hadoop",), gating=(True,))
+    whole = S.run_sweep(batch, 1_000, chunk_ticks=10_000)[0]
+    chunked = S.run_sweep(batch, 1_000, chunk_ticks=250)[0]
+    for k in PARITY_KEYS:
+        a, b = whole[k], chunked[k]
+        assert abs(a - b) <= 1e-6 * max(abs(a), abs(b), 1.0), (k, a, b)
+
+
+def test_rate_scale_is_a_batch_axis():
+    """Utilization sweeps ride the same compile: higher rate_scale must
+    inject more and keep more links on."""
+    batch = S.sweep_grid(traces=("microsoft",), gating=(True,),
+                         rate_scales=(0.3, 1.5))
+    lo, hi = S.run_sweep(batch, 1_200)
+    assert hi["injected_pkts"] > lo["injected_pkts"]
+    assert hi["rsw_link_on_frac"] >= lo["rsw_link_on_frac"] - 0.02
