@@ -1,0 +1,137 @@
+"""Fig-1-style design comparison on the dynamic simulator: several
+FBSite fabric shapes (same server population, different cluster / plane
+/ core structure), each with LC/DC gating and the always-on baseline,
+run as ONE multi-site batched sweep — a single vmapped compile over the
+padded hull, remainder tail included.
+
+This is the dynamic companion to topology.all_designs() (the paper's
+static Fig 1 component-count power table, also printed for context):
+instead of peak component power it reports what the watermark controller
+actually achieves on each fabric shape under the same traffic.
+
+  PYTHONPATH=src python -m benchmarks.bench_multi_site           # 20k us
+  PYTHONPATH=src python -m benchmarks.bench_multi_site --smoke   # canary
+
+--check additionally re-runs every scenario single-site and asserts the
+PARITY_KEYS agree within --tol (the padding-is-inert contract).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.core import simulator as S
+from repro.core.topology import FBSite, all_designs
+from repro.core.traffic import TRAFFIC_SPECS
+
+OUT = Path(__file__).resolve().parents[1] / "results" / \
+    "bench_multi_site.json"
+
+# same 128 racks x 48 servers, three fabric shapes: the Fig 2 default,
+# a wide two-cluster build (fewer, fatter clusters), and a dense
+# eight-cluster build (more, thinner clusters with 2 planes / 2 FCs)
+SITES = {
+    "fb_clos_4x32": FBSite(),
+    "wide_2x64": FBSite(n_clusters=2, racks_per_cluster=64,
+                        csw_per_cluster=4, n_fc=4),
+    "dense_8x16": FBSite(n_clusters=8, racks_per_cluster=16,
+                         csw_per_cluster=2, n_fc=2,
+                         csw_ring_links=4, fc_ring_links=8),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=None)
+    ap.add_argument("--trace", default="fb_hadoop",
+                    choices=sorted(TRAFFIC_SPECS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run, <1 min, for use as a CI canary")
+    ap.add_argument("--check", action="store_true",
+                    help="verify parity against single-site run_sweep")
+    ap.add_argument("--tol", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    # deliberately NOT a multiple of the chunk: the remainder tail must
+    # ride the same compiled chunk program (live-tick mask)
+    ticks = args.ticks or (1_000 if args.smoke else 20_000)
+    chunk = 400 if args.smoke else 8_192
+
+    spec = TRAFFIC_SPECS[args.trace]
+    runs = [(S.SimParams(spec=spec, site=site, gating_enabled=g), 0)
+            for site in SITES.values() for g in (True, False)]
+    batch = S.make_multi_site_batch(runs)
+    hull = batch.hull
+    print(f"{len(SITES)} sites x {{lcdc, base}} = {len(runs)} scenarios, "
+          f"trace={args.trace}, {ticks} ticks (chunk {chunk}), "
+          f"hull {S._site_tag(hull)}")
+
+    n0 = S.TRACE_COUNT
+    t0 = time.time()
+    res = S.run_sweep(batch, ticks, chunk_ticks=chunk)
+    wall = time.time() - t0
+    traces = S.TRACE_COUNT - n0
+    print(f"one multi-site sweep: {wall:.2f} s, step traces: {traces} "
+          f"(contract: 1, remainder tail included)")
+    if traces != 1:
+        raise SystemExit(f"one-compile contract broken: {traces} traces")
+
+    print("\n--- static Fig 1 context (peak component power, kW) ---")
+    for d in all_designs():
+        kw = sum(d.network_power_w().values()) / 1e3
+        print(f"{d.name:22s} {kw:8.1f} kW   ({d.notes})")
+
+    print("\n--- dynamic LC/DC comparison (this sweep) ---")
+    rows = []
+    for i, (name, site) in enumerate(SITES.items()):
+        lc, base = res[2 * i], res[2 * i + 1]
+        pen = lc["mean_latency_us"] / base["mean_latency_us"] - 1.0
+        rows.append({
+            "site": name, "label": lc["label"],
+            "gated_links": site.n_rsw_csw_links + site.n_csw_fc_links,
+            "peak_transceiver_w": site.total_transceiver_power_w(),
+            "switch_energy_savings_frac":
+                lc["switch_energy_savings_frac"],
+            "all_transceiver_savings_frac":
+                lc["all_transceiver_savings_frac"],
+            "transceiver_power_w": lc["transceiver_power_w"],
+            "mean_latency_us": lc["mean_latency_us"],
+            "latency_penalty": pen,
+            "half_off_frac": lc["half_off_frac"],
+        })
+        print(f"{name:14s} savings={lc['switch_energy_savings_frac']:.3f} "
+              f"(all-transceiver {lc['all_transceiver_savings_frac']:.3f}) "
+              f"latency {lc['mean_latency_us']:6.2f} us "
+              f"({pen*100:+.1f}%) half-off {lc['half_off_frac']:.0%}")
+
+    worst_key, worst = None, 0.0
+    if args.check:
+        for run, mixed in zip(runs, res):
+            single = S.run_sweep(S.make_batch([run]), ticks,
+                                 chunk_ticks=chunk)[0]
+            for k in S.PARITY_KEYS:
+                d = abs(single[k] - mixed[k]) / max(
+                    abs(single[k]), abs(mixed[k]), 1e-9)
+                if d > worst:
+                    worst_key, worst = f"{mixed['label']}:{k}", d
+        ok = worst <= args.tol
+        print(f"\nmax multi-vs-single-site rel diff: {worst:.2e} "
+              f"[{worst_key}] {'OK' if ok else f'> tol {args.tol:g}'}")
+        if not ok:
+            raise SystemExit(1)
+
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps({
+        "smoke": args.smoke, "trace": args.trace, "ticks": ticks,
+        "chunk_ticks": chunk, "scenarios": len(runs),
+        "step_traces": traces, "wall_s": round(wall, 3),
+        "checked": bool(args.check), "max_rel_diff": worst,
+        "sites": rows,
+    }, indent=1))
+    print(f"written: {OUT}")
+
+
+if __name__ == "__main__":
+    main()

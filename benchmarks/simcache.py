@@ -1,29 +1,58 @@
 """Shared simulation runner for the Fig 8/9/10 benchmarks: runs every
 trace (LC/DC + always-on baseline) as ONE batched sweep — a single
-compile + vmapped scan over the whole grid — and caches to results/."""
+compile + vmapped scan over the whole grid — and caches to results/.
+
+The cache key is not just ``ticks``: it carries the simulator's
+``SIM_SCHEMA_VERSION`` and the full site fingerprint, so results cached
+before a simulator semantics change (or for a different FBSite) are
+invalidated instead of silently served stale.
+"""
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 from pathlib import Path
 
-from repro.core.simulator import SimParams, make_batch, run_sweep
+from repro.core.simulator import (SIM_SCHEMA_VERSION, SimParams,
+                                  _site_tag, make_batch, run_sweep)
+from repro.core.topology import FBSite
 from repro.core.traffic import TRAFFIC_SPECS
 
 OUT = Path(__file__).resolve().parents[1] / "results" / "sim_results.json"
 TICKS = 100_000
 
 
-def get_results(ticks: int = TICKS, force: bool = False) -> dict:
-    data = {"ticks": ticks, "traces": {}}
-    if OUT.exists() and not force:
-        prev = json.loads(OUT.read_text())
-        if prev.get("ticks") == ticks:
+def _cache_meta(site: FBSite, ticks: int) -> dict:
+    return {"sim_schema": SIM_SCHEMA_VERSION, "ticks": ticks,
+            "site": dataclasses.asdict(site)}
+
+
+def _cache_path(site: FBSite, ticks: int) -> Path:
+    # non-default configurations get their own file so they coexist
+    # with (rather than clobber) the default cache; the tag covers
+    # EVERY FBSite field so distinct sites never share a file
+    if site == FBSite() and ticks == TICKS:
+        return OUT
+    tag = (f"{_site_tag(site)}s{site.servers_per_rack}"
+           f"r{site.csw_ring_links}-{site.fc_ring_links}_{ticks}")
+    return OUT.with_name(f"sim_results_{tag}.json")
+
+
+def get_results(ticks: int = TICKS, force: bool = False,
+                site: FBSite = FBSite()) -> dict:
+    meta = _cache_meta(site, ticks)
+    out = _cache_path(site, ticks)
+    data = {"meta": meta, "ticks": ticks, "traces": {}}
+    if out.exists() and not force:
+        prev = json.loads(out.read_text())
+        # pre-schema caches have no "meta" at all -> invalidated too
+        if prev.get("meta") == meta:
             data = prev
     missing = [n for n in TRAFFIC_SPECS if n not in data["traces"]]
     if not missing:
         return data
-    OUT.parent.mkdir(parents=True, exist_ok=True)
+    out.parent.mkdir(parents=True, exist_ok=True)
     # one B=2 sweep per missing trace: every call after the first reuses
     # the same cached compile (identical batch shape), and the per-trace
     # incremental save keeps an interrupted 100k-tick run resumable
@@ -31,11 +60,12 @@ def get_results(ticks: int = TICKS, force: bool = False) -> dict:
         spec = TRAFFIC_SPECS[name]
         t0 = time.time()
         lc, base = run_sweep(make_batch(
-            [(SimParams(spec=spec, gating_enabled=True), 0),
-             (SimParams(spec=spec, gating_enabled=False), 0)]), ticks)
+            [(SimParams(spec=spec, site=site, gating_enabled=True), 0),
+             (SimParams(spec=spec, site=site, gating_enabled=False), 0)]),
+            ticks)
         data["traces"][name] = {
             "lcdc": lc, "baseline": base,
             "wall_s": round(time.time() - t0, 1),
         }
-        OUT.write_text(json.dumps(data, indent=1))   # incremental save
+        out.write_text(json.dumps(data, indent=1))   # incremental save
     return data

@@ -89,10 +89,19 @@ def gate_step(state: GateState, queues: jnp.ndarray,
               hi: float = C.HI_WATERMARK, lo: float = C.LO_WATERMARK,
               up_delay: int = C.STAGE_UP_DELAY_TICKS,
               off_delay: int = C.STAGE_OFF_DELAY_TICKS,
-              dwell: int = C.STAGE_DWELL_TICKS) -> GateState:
-    """One controller tick. queues: (S, L) backlogs in packets."""
+              dwell: int = C.STAGE_DWELL_TICKS,
+              max_stage=None) -> GateState:
+    """One controller tick. queues: (S, L) backlogs in packets.
+
+    ``max_stage`` caps the stage per switch (scalar or (S,) int); it
+    defaults to L. The padded multi-site sweep engine passes each
+    switch's REAL link count so a site whose link axis is padded to a
+    wider hull never activates links it does not physically have.
+    """
     S, L = queues.shape
     idx = jnp.arange(L)[None, :]
+    max_stage = jnp.asarray(L if max_stage is None else max_stage,
+                            jnp.int32)
 
     hi_trig, lo_trig = watermark_triggers(queues, state.stage,
                                           cap=cap, hi=hi, lo=lo)
@@ -103,13 +112,14 @@ def gate_step(state: GateState, queues: jnp.ndarray,
     hold = jnp.maximum(hold - 1, 0)
 
     # --- stage-up: start turn-on unless at max / rising / powering off
-    can_up = hi_trig & (stage < L) & (up_timer == 0) & (off_timer == 0)
+    can_up = hi_trig & (stage < max_stage) & (up_timer == 0) \
+        & (off_timer == 0)
     up_timer = jnp.where(can_up, up_delay, up_timer)
     # cancel a drain if load returned
     draining = jnp.where(hi_trig, False, draining)
     # countdown; on expiry the new link becomes usable
     fired = up_timer == 1
-    stage = jnp.where(fired, jnp.minimum(stage + 1, L), stage)
+    stage = jnp.where(fired, jnp.minimum(stage + 1, max_stage), stage)
     hold = jnp.where(fired, dwell, hold)     # anti-flap dwell
     up_timer = jnp.maximum(up_timer - 1, 0)
 

@@ -16,6 +16,15 @@ FC load-balancing rings (the rings exist for exactly this in Fig 2) to
 the always-on stage-1 path, paying ring latency. Connectivity is never
 lost because stage >= 1 everywhere (the paper's core invariant).
 
+The wiring invariants are FBSite's (topology.py): RSW uplink c IS the
+link to cluster-CSW c (the stage-c plane, ``rsw_uplinks ==
+csw_per_cluster``) and CSW uplink f IS the link to fabric core f
+(``csw_uplinks == n_fc``). The hot loop's down-plane reshapes are
+written against the semantically correct axes (csw_per_cluster for the
+plane axis, csw_uplinks for the FC-uplink axis), so topology-general
+sites — any n_clusters / racks_per_cluster / csw_per_cluster / n_fc —
+route correctly.
+
 Latency is measured with Little's law per queue group (mean delay =
 mean backlog / delivered rate) plus fixed per-hop wire/pipeline/stack
 latencies; the paper reports mean packet delivery latency, which this
@@ -31,20 +40,39 @@ array-valued leaf of a :class:`Scenario` pytree, so one jitted
     batch = sweep_grid(traces=("fb_hadoop", "fb_web"), seeds=(0, 1))
     results = run_sweep(batch, n_ticks=100_000)   # list of metric dicts
 
+Multi-site batches
+------------------
+The scenario's site SHAPE is itself a set of traced knobs: ``Scenario``
+carries each scenario's real (n_clusters, racks_per_cluster,
+csw_per_cluster, n_fc, servers_per_rack), and the step runs on a static
+padded hull (the per-axis max over the batch) with validity masks
+derived in-step. ``make_multi_site_batch`` stacks runs on ARBITRARY
+FBSite variants — the Fig 1 design-comparison axis — into one batch
+that compiles ONCE. Racks and CSWs occupy blocked (cluster-major)
+positions in the hull, padded entries are provably inert (no spawns, no
+arrivals, stage pinned to 1, masked out of every accumulator), and all
+per-rack randomness is keyed by the rack's logical id, so a site's
+metrics are identical whether it runs alone at exact dims or padded
+inside a heterogeneous batch.
+
 One-compile contract: ``run_sweep`` compiles exactly once per
-(site topology, batch size, chunk length) — re-running the same-shaped
-sweep with different knob values (traces, watermarks, seeds, ...) reuses
-the cached executable; ``TRACE_COUNT`` counts step traces so tests can
-pin this. Long runs are chunked (``chunk_ticks``, default 10k): the
-jitted chunk donates its carry on accelerator backends and at every
-chunk boundary the per-scenario accumulators are folded into float64
-host accumulators and zeroed on device, bounding both scan memory and
-float32 accumulation error.
+(hull topology, batch size, chunk length) — re-running the same-shaped
+sweep with different knob values (traces, watermarks, seeds, sites
+fitting the same hull, ...) reuses the cached executable;
+``TRACE_COUNT`` counts step traces so tests can pin this. Long runs are
+chunked (``chunk_ticks``, default 10k): the jitted chunk donates its
+carry on accelerator backends and at every chunk boundary the
+per-scenario accumulators are folded into float64 host accumulators and
+zeroed on device, bounding both scan memory and float32 accumulation
+error. A remainder (``n_ticks % chunk_ticks != 0``) does NOT compile a
+second program: the tail runs the same fixed-length chunk with a live
+mask, dead ticks passing the carry through unchanged.
 
 The per-switch scheduling/enqueue/serve/watermark block of the hot loop
 runs through ``ops.switch_step`` — the Pallas kernel on TPU, its
 pure-jnp oracle (kernels/ref.py) on CPU — so the simulator and the
-kernel share one switch-tick definition.
+kernel share one switch-tick definition (including the multi-site
+``valid`` padding mask).
 
 ``run_sim`` (one scenario) is kept for unit runs and ablations; it
 re-traces per call exactly like the pre-sweep engine, so serial loops
@@ -69,12 +97,16 @@ from repro.kernels import ops
 
 F_SLOTS = 64              # concurrent flow slots per rack
 NODE_IDLE_TICKS = 50      # server-link idle timeout (us)
-RING_CAP = 8              # pkts/tick cluster ring budget
-FC_RING_CAP = 16
+# ring migration budgets are per-site (1 pkt/tick per 10G ring link):
+# scen.csw_ring / scen.fc_ring, from FBSite.csw_ring_links/fc_ring_links
 WIRE_HOP_US = 0.5         # fiber + switch pipeline per hop
 STACK_US = 3.75           # TCP/IP + NIC (Sec IV-C)
 
 CHUNK_TICKS = 10_000      # default scan chunk (accumulator fold period)
+
+#: bump when the step semantics change — cached results keyed on an
+#: older version (benchmarks/simcache.py) are invalidated
+SIM_SCHEMA_VERSION = 2
 
 #: number of times the sweep step has been traced (the one-compile probe)
 TRACE_COUNT = 0
@@ -92,8 +124,10 @@ PARITY_KEYS = (
 class Scenario(NamedTuple):
     """Per-scenario knobs as array leaves (vmap axis 0 = scenario).
 
-    Scalars per scenario; ``make_batch`` stacks them to (B,) arrays so
-    the whole batch is one pytree the jitted step closes over.
+    Scalars per scenario; the batch builders stack them to (B,) arrays
+    so the whole batch is one pytree the jitted step closes over. The
+    last block is the scenario's REAL site shape inside the padded hull
+    (equal to the hull for a single-site batch).
     """
     # traffic (TrafficSpec fields; p_spawn folds iat + rate_scale)
     p_spawn: jax.Array          # f32: P(new flow)/rack/tick while ON
@@ -116,6 +150,14 @@ class Scenario(NamedTuple):
     hi: jax.Array               # f32
     lo: jax.Array               # f32
     dwell: jax.Array            # int32
+    # site shape (real dims; <= the hull's static dims)
+    ncl: jax.Array              # int32 n_clusters
+    rpc: jax.Array              # int32 racks_per_cluster
+    cpc: jax.Array              # int32 csw_per_cluster (= rsw uplinks)
+    nfc: jax.Array              # int32 n_fc (= csw uplinks)
+    spr: jax.Array              # f32 servers_per_rack
+    csw_ring: jax.Array         # f32 cluster-ring pkts/tick budget
+    fc_ring: jax.Array          # f32 FC-ring pkts/tick budget
 
 
 class SimState(NamedTuple):
@@ -124,8 +166,8 @@ class SimState(NamedTuple):
     flow_rem: jax.Array        # (R, F) int32 remaining packets
     flow_dest: jax.Array       # (R, F) int32 0=rack 1=cluster 2=inter
     flow_fast: jax.Array       # (R, F) bool: line-rate elephant
-    rsw_q: jax.Array           # (R, L, 2) float [intra, inter]
-    csw_up_q: jax.Array        # (NC, L) float
+    rsw_q: jax.Array           # (R, P, 2) float [intra, inter]
+    csw_up_q: jax.Array        # (NC, CUP) float
     csw_down_q: jax.Array      # (NC, RPC) float
     fc_down_q: jax.Array       # (NF, NC) float
     rsw_gate: gating.GateState
@@ -148,9 +190,15 @@ class SimParams:
 
 @dataclass(frozen=True)
 class ScenarioBatch:
-    """A stack of scenarios sharing one site topology (one compile)."""
+    """A stack of scenarios sharing one padded hull (one compile).
+
+    ``hull`` is the static shape the step compiles against (the per-axis
+    max over ``sites``); ``sites`` holds each scenario's real FBSite for
+    metric normalization. For a single-site batch hull == sites[i].
+    """
     scen: Scenario             # leaves shape (B,)
-    site: FBSite
+    hull: FBSite
+    sites: tuple               # FBSite per scenario
     names: tuple               # trace name per scenario
     labels: tuple              # unique human label per scenario
     gating: tuple              # python bools (for metric finalization)
@@ -160,21 +208,39 @@ class ScenarioBatch:
         return len(self.labels)
 
 
-def make_batch(runs: Sequence[tuple[SimParams, int]]) -> ScenarioBatch:
-    """Stack (SimParams, seed) pairs into one vmappable ScenarioBatch."""
+def _pad_hull(sites: Sequence[FBSite]) -> FBSite:
+    """The smallest FBSite every site in the batch fits inside."""
+    return FBSite(
+        n_clusters=max(s.n_clusters for s in sites),
+        racks_per_cluster=max(s.racks_per_cluster for s in sites),
+        servers_per_rack=max(s.servers_per_rack for s in sites),
+        csw_per_cluster=max(s.csw_per_cluster for s in sites),
+        n_fc=max(s.n_fc for s in sites),
+        csw_ring_links=max(s.csw_ring_links for s in sites),
+        fc_ring_links=max(s.fc_ring_links for s in sites))
+
+
+def _site_tag(site: FBSite) -> str:
+    return (f"{site.n_clusters}x{site.racks_per_cluster}"
+            f"c{site.csw_per_cluster}f{site.n_fc}")
+
+
+def _build_batch(runs: Sequence[tuple[SimParams, int]],
+                 tag_sites: bool) -> ScenarioBatch:
     assert runs, "empty scenario batch"
-    site = runs[0][0].site
-    assert all(p.site == site for p, _ in runs), \
-        "one ScenarioBatch = one site topology (one compile)"
     params = [p for p, _ in runs]
+    sites = tuple(p.site for p in params)
     tf = stack_specs([p.spec for p in params])
 
     def f32(xs):
         return jnp.asarray(xs, jnp.float32)
 
+    def i32(xs):
+        return jnp.asarray(xs, jnp.int32)
+
     scen = Scenario(
         p_spawn=f32([min(rack_flow_rate_per_tick(p.spec,
-                                                 site.servers_per_rack)
+                                                 p.site.servers_per_rack)
                          * p.rate_scale, 1.0) for p in params]),
         p_on_off=f32(tf["p_on_off"]), p_off_on=f32(tf["p_off_on"]),
         size_w=f32(tf["size_w"]),
@@ -190,15 +256,50 @@ def make_batch(runs: Sequence[tuple[SimParams, int]]) -> ScenarioBatch:
                                    bool),
         queue_cap=f32([p.queue_cap for p in params]),
         hi=f32([p.hi for p in params]), lo=f32([p.lo for p in params]),
-        dwell=jnp.asarray([p.dwell for p in params], jnp.int32))
+        dwell=jnp.asarray([p.dwell for p in params], jnp.int32),
+        ncl=i32([p.site.n_clusters for p in params]),
+        rpc=i32([p.site.racks_per_cluster for p in params]),
+        cpc=i32([p.site.csw_per_cluster for p in params]),
+        nfc=i32([p.site.n_fc for p in params]),
+        spr=f32([p.site.servers_per_rack for p in params]),
+        # 1 pkt/tick per 10G ring link
+        csw_ring=f32([p.site.csw_ring_links for p in params]),
+        fc_ring=f32([p.site.fc_ring_links for p in params]))
     labels = tuple(
         f"{p.spec.name}|{'lcdc' if p.gating_enabled else 'base'}"
-        f"|x{p.rate_scale:g}|s{seed}" for p, seed in runs)
+        f"|x{p.rate_scale:g}|s{seed}"
+        + (f"|{_site_tag(p.site)}" if tag_sites else "")
+        for p, seed in runs)
     return ScenarioBatch(
-        scen=scen, site=site,
+        scen=scen, hull=_pad_hull(sites), sites=sites,
         names=tuple(p.spec.name for p, _ in runs), labels=labels,
         gating=tuple(bool(p.gating_enabled) for p, _ in runs),
         seeds=tuple(int(s) for _, s in runs))
+
+
+def make_batch(runs: Sequence[tuple[SimParams, int]]) -> ScenarioBatch:
+    """Stack (SimParams, seed) pairs sharing ONE site into a batch."""
+    assert runs, "empty scenario batch"
+    site = runs[0][0].site
+    assert all(p.site == site for p, _ in runs), \
+        "make_batch takes one site topology; heterogeneous sites go " \
+        "through make_multi_site_batch (padded hull, one compile)"
+    return _build_batch(runs, tag_sites=False)
+
+
+def make_multi_site_batch(
+        runs: Sequence[tuple[SimParams, int]]) -> ScenarioBatch:
+    """Stack (SimParams, seed) pairs on ARBITRARY FBSite variants into
+    one batch that runs as ONE vmapped compile (the Fig 1
+    design-comparison axis).
+
+    Every scenario is padded to the batch hull (per-axis max) with
+    validity masks; labels gain a ``|<ncl>x<rpc>c<cpc>f<nfc>`` site tag
+    so same-spec runs on different sites stay distinguishable. Each
+    scenario's metrics match its single-site ``run_sweep`` result
+    (tests/test_topology_general.py pins this).
+    """
+    return _build_batch(runs, tag_sites=True)
 
 
 def grid_runs(traces=None, gating=(True, False), seeds=(0,),
@@ -224,17 +325,44 @@ def sweep_grid(traces=None, gating=(True, False), seeds=(0,),
                                 **params_kw))
 
 
-def _init_state(site: FBSite, scen: Scenario, key) -> SimState:
-    s = site
-    R, L = s.n_racks, s.rsw_uplinks
+def _site_masks(hull: FBSite, scen: Scenario):
+    """Validity masks + logical rack ids of a real site inside the hull.
+
+    Racks and CSWs occupy blocked cluster-major hull positions — rack r
+    of cluster k sits at row k*hull.racks_per_cluster + r — so the
+    step's reshapes to (n_clusters, ...) stay static while the REAL
+    dims ride in as traced scenario knobs. Returns (rack_valid (R,),
+    csw_valid (NC,), rack_uid (R,), rsw_max_stage (R,), csw_max_stage
+    (NC,)); invalid switches get max stage 1 (they idle at the floor).
+    """
+    kk = jnp.arange(hull.n_clusters)
+    rr = jnp.arange(hull.racks_per_cluster)
+    cc = jnp.arange(hull.csw_per_cluster)
+    cl_valid = kk < scen.ncl
+    rack_valid = (cl_valid[:, None] & (rr[None, :] < scen.rpc)).reshape(-1)
+    csw_valid = (cl_valid[:, None] & (cc[None, :] < scen.cpc)).reshape(-1)
+    # logical id: position in the site's OWN (unpadded) rack order; the
+    # PRNG is keyed on this, making traffic independent of hull padding
+    rack_uid = (kk[:, None] * scen.rpc + rr[None, :]).reshape(-1)
+    rsw_max = jnp.where(rack_valid, scen.cpc, 1).astype(jnp.int32)
+    csw_max = jnp.where(csw_valid, scen.nfc, 1).astype(jnp.int32)
+    return rack_valid, csw_valid, rack_uid, rsw_max, csw_max
+
+
+def _init_state(hull: FBSite, scen: Scenario, key) -> SimState:
+    s = hull
+    R, P = s.n_racks, s.csw_per_cluster
     NC, RPC, NF = s.n_csw, s.racks_per_cluster, s.n_fc
     g = scen.gating_enabled
+    rack_valid, csw_valid, _, rsw_max, csw_max = _site_masks(hull, scen)
 
-    def tier_gate(n, links):
-        # gating on: stage floor 1; off: every link up and pinned there
+    def tier_gate(n, links, pin):
+        # gating on: stage floor 1; off: every REAL link up, pinned
+        # there (padded links beyond the site's own never power on)
         base = gating.gate_init(n, links)
-        stage = jnp.where(g, base.stage, jnp.int32(links))
-        powered = jnp.where(g, base.powered, True)
+        stage = jnp.where(g, base.stage, pin)
+        powered = jnp.where(g, base.powered,
+                            jnp.arange(links)[None, :] < pin[:, None])
         return base._replace(stage=stage, powered=powered)
 
     acc = {
@@ -256,43 +384,51 @@ def _init_state(site: FBSite, scen: Scenario, key) -> SimState:
         flow_rem=jnp.zeros((R, F_SLOTS), jnp.int32),
         flow_dest=jnp.zeros((R, F_SLOTS), jnp.int32),
         flow_fast=jnp.zeros((R, F_SLOTS), bool),
-        rsw_q=jnp.zeros((R, L, 2)),
+        rsw_q=jnp.zeros((R, P, 2)),
         csw_up_q=jnp.zeros((NC, s.csw_uplinks)),
         csw_down_q=jnp.zeros((NC, RPC)),
         fc_down_q=jnp.zeros((NF, NC)),
-        rsw_gate=tier_gate(R, L),
-        csw_gate=tier_gate(NC, s.csw_uplinks),
+        rsw_gate=tier_gate(R, P, rsw_max),
+        csw_gate=tier_gate(NC, s.csw_uplinks, csw_max),
         node_on=jnp.zeros((R,)),
         acc=acc,
     )
 
 
-def _spawn_flows(site: FBSite, scen: Scenario, key, burst_on, flow_rem,
-                 flow_dest, flow_fast):
-    """Per-rack flow arrivals: Bernoulli spawn into the first free slot."""
-    R = site.n_racks
-    k1, k2, k3, k4 = jax.random.split(key, 4)
+def _spawn_flows(scen: Scenario, k_u, k_z, rack_uid, rack_valid,
+                 burst_on, flow_rem, flow_dest, flow_fast):
+    """Per-rack flow arrivals: Bernoulli spawn into the first free slot.
+
+    All per-rack randomness is keyed by fold_in(tick key, rack_uid) —
+    the rack's LOGICAL id within its own site, not its row in the
+    padded hull — so a site's traffic is bit-identical whether it runs
+    at exact dims or padded inside a heterogeneous multi-site batch.
+    Returns the updated flow state plus this tick's per-flow pace
+    uniforms (R, F_SLOTS).
+    """
+    ku = jax.vmap(lambda i: jax.random.fold_in(k_u, i))(rack_uid)
+    kz = jax.vmap(lambda i: jax.random.fold_in(k_z, i))(rack_uid)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (5 + F_SLOTS,)))(ku)
+    z = jax.vmap(lambda k: jax.random.normal(k, (2,)))(kz)
 
     # ON/OFF burst Markov
-    stay_on = jax.random.uniform(k1, (R,)) > scen.p_on_off
-    wake = jax.random.uniform(k2, (R,)) < scen.p_off_on
+    stay_on = u[:, 0] > scen.p_on_off
+    wake = u[:, 1] < scen.p_off_on
     burst_on = jnp.where(burst_on, stay_on, wake)
 
-    spawn = jax.random.bernoulli(k3, scen.p_spawn, (R,)) & burst_on
+    # padded hull rows never spawn: they stay empty forever
+    spawn = (u[:, 2] < scen.p_spawn) & burst_on & rack_valid
 
-    ks, kd = jax.random.split(k4)
     # lognormal mixture sizes -> packets (1250 B per packet)
-    km1, km2, km3 = jax.random.split(ks, 3)
-    pick = jax.random.bernoulli(km1, scen.size_w, (R,))
-    z1 = jax.random.normal(km2, (R,))
-    z2 = jax.random.normal(km3, (R,))
-    size_b = jnp.where(pick, jnp.exp(scen.size_mu1 + scen.size_s1 * z1),
-                       jnp.exp(scen.size_mu2 + scen.size_s2 * z2))
+    pick_mix = u[:, 3] < scen.size_w
+    size_b = jnp.where(pick_mix,
+                       jnp.exp(scen.size_mu1 + scen.size_s1 * z[:, 0]),
+                       jnp.exp(scen.size_mu2 + scen.size_s2 * z[:, 1]))
     size_p = jnp.maximum(jnp.ceil(size_b / 1250.0), 1.0).astype(jnp.int32)
 
-    u = jax.random.uniform(kd, (R,))
-    dest = jnp.where(u < scen.p_intra_rack, 0,
-                     jnp.where(u < scen.p_intra_rack + scen.p_intra_cluster,
+    ud = u[:, 4]
+    dest = jnp.where(ud < scen.p_intra_rack, 0,
+                     jnp.where(ud < scen.p_intra_rack + scen.p_intra_cluster,
                                1, 2)).astype(jnp.int32)
 
     free = flow_rem == 0
@@ -308,26 +444,33 @@ def _spawn_flows(site: FBSite, scen: Scenario, key, burst_on, flow_rem,
     flow_dest = jnp.where(slot, dest[:, None], flow_dest)
     fast = size_p >= scen.elephant_pkts
     flow_fast = jnp.where(slot, fast[:, None], flow_fast)
-    return burst_on, flow_rem, flow_dest, flow_fast
+    return burst_on, flow_rem, flow_dest, flow_fast, u[:, 5:]
 
 
-def make_sim_step(site: FBSite):
-    """One tick for ONE scenario; all scenario knobs are traced scalars,
-    so jax.vmap(step) batches arbitrarily many scenarios per compile."""
-    s = site
-    R, L = s.n_racks, s.rsw_uplinks
-    NC, RPC, NF = s.n_csw, s.racks_per_cluster, s.n_fc
-    CPC = s.csw_per_cluster
-    n_clusters = s.n_clusters
+def make_sim_step(hull: FBSite):
+    """One tick for ONE scenario on the static padded ``hull``; every
+    scenario knob — including the scenario's real site dims — is a
+    traced scalar, so jax.vmap(step) batches arbitrarily many scenarios
+    (on heterogeneous sites fitting the hull) per compile."""
+    s = hull
+    NCL, RPC = s.n_clusters, s.racks_per_cluster
+    P = s.csw_per_cluster     # plane axis: RSW uplink c IS cluster-CSW c
+    NF = s.n_fc
+    CUP = s.csw_uplinks       # == NF (FBSite invariant: uplink f -> FC f)
+    R, NC = s.n_racks, s.n_csw
 
     def step(scen: Scenario, state: SimState) -> SimState:
         acc = dict(state.acc)
-        key, k_spawn, k_pace = jax.random.split(state.key, 3)
+        rack_valid, csw_valid, rack_uid, rsw_max, csw_max = \
+            _site_masks(hull, scen)
+        rpcf = scen.rpc.astype(jnp.float32)
+        nclf = scen.ncl.astype(jnp.float32)
+        key, k_u, k_z = jax.random.split(state.key, 3)
 
         # 1. traffic edge ------------------------------------------------
-        burst_on, flow_rem, flow_dest, flow_fast = _spawn_flows(
-            site, scen, k_spawn, state.burst_on, state.flow_rem,
-            state.flow_dest, state.flow_fast)
+        burst_on, flow_rem, flow_dest, flow_fast, pace_u = _spawn_flows(
+            scen, k_u, k_z, rack_uid, rack_valid, state.burst_on,
+            state.flow_rem, state.flow_dest, state.flow_fast)
         active = flow_rem > 0                                   # (R,F)
         # paced emission: mice trickle below line rate (boosted during
         # bursts); elephants transmit at line rate -- overlapping
@@ -336,8 +479,7 @@ def make_sim_step(site: FBSite):
             scen.pace * jnp.where(burst_on, scen.burst_pace_boost, 1.0),
             1.0)[:, None]
         pace_flow = jnp.where(flow_fast, scen.elephant_pace, pace_eff)
-        emit = active & (jax.random.uniform(k_pace, active.shape)
-                         < pace_flow)
+        emit = active & (pace_u < pace_flow)
         n_holding = jnp.sum(active, axis=1).astype(jnp.float32)  # (R,)
         by_dest = jnp.stack(
             [jnp.sum(emit & (flow_dest == d), axis=1) for d in (0, 1, 2)],
@@ -351,36 +493,39 @@ def make_sim_step(site: FBSite):
         # the shared switch-step kernel (Pallas on TPU, ref on CPU).
         rsw_q, served_split, _, _, rsw_drop = ops.switch_step(
             state.rsw_q, state.rsw_gate.stage, by_dest[:, 1:],
-            state.rsw_gate.draining, cap=scen.queue_cap, hi=scen.hi,
-            lo=scen.lo, serve_rate=1.0)
+            state.rsw_gate.draining, valid=rack_valid,
+            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, serve_rate=1.0)
         acc["drops"] += jnp.sum(rsw_drop)
         acc["rsw_backlog"] += jnp.sum(rsw_q) + jnp.sum(served_split)
         acc["rsw_served"] += jnp.sum(served_split)
 
-        # uplink l of rack r lands on CSW (cluster(r), l)
-        srv_rc = served_split.reshape(n_clusters, RPC, L, 2)
-        to_csw = jnp.sum(srv_rc, axis=1)                         # (ncl,L,2)
+        # uplink c of rack r lands on CSW (cluster(r), c): the uplink
+        # axis IS the csw_per_cluster plane axis (FBSite invariant)
+        srv_rc = served_split.reshape(NCL, RPC, P, 2)
+        to_csw = jnp.sum(srv_rc, axis=1)                         # (NCL,P,2)
         inter_in = to_csw[..., 1].reshape(NC)
 
         # Stage-aware down-plane weights (the per-stage CAM tables of
         # Sec III-B): traffic for rack r rides plane c with weight
-        # active(r,c)/stage(r); dest racks are uniform within the cluster.
+        # active(r,c)/stage(r); dest racks are uniform within the
+        # cluster. Padded hull rows carry zero weight.
         rsw_stage_f = state.rsw_gate.stage.astype(jnp.float32)
-        plane_w = (jnp.arange(L)[None, :] < state.rsw_gate.stage[:, None]) \
-            / rsw_stage_f[:, None]                               # (R,L)
-        plane_w_c = plane_w.reshape(n_clusters, RPC, L)
+        plane_w = (jnp.arange(P)[None, :] < state.rsw_gate.stage[:, None]) \
+            / rsw_stage_f[:, None] * rack_valid[:, None]         # (R,P)
+        plane_w_c = plane_w.reshape(NCL, RPC, P)
 
         # 4. CSW: intra-cluster traffic -> down queues. A packet for rack
         # r arriving UP at csw c may have to cross to plane c' active for
         # r; within a cluster that crossing is the CSW ring. We charge the
         # ring for the mismatch between arrival plane and dest plane.
-        intra_cl = jnp.sum(to_csw[..., 0], axis=1)               # (ncl,)
-        dest_share = intra_cl[:, None, None] / RPC * \
-            plane_w_c.transpose(0, 2, 1)                         # (ncl,L,RPC)
+        intra_cl = jnp.sum(to_csw[..., 0], axis=1)               # (NCL,)
+        dest_share = intra_cl[:, None, None] / rpcf * \
+            plane_w_c.transpose(0, 2, 1)                         # (NCL,P,RPC)
         csw_down_q = state.csw_down_q + dest_share.reshape(NC, RPC)
         # ring charge: fraction of intra traffic whose up-plane != down-plane
         up_share = to_csw[..., 0] / jnp.maximum(intra_cl[:, None], 1e-9)
-        mean_down = jnp.mean(plane_w_c, axis=1)                  # (ncl,L)
+        # per-plane mean dest weight over the cluster's REAL racks
+        mean_down = jnp.sum(plane_w_c, axis=1) / rpcf            # (NCL,P)
         same_plane = jnp.sum(jnp.minimum(up_share, mean_down), axis=1)
         acc["ring_pkts"] += jnp.sum(intra_cl * (1.0 - same_plane))
 
@@ -388,25 +533,27 @@ def make_sim_step(site: FBSite):
         # the same shared switch-step kernel (single component).
         csw_up_q, cserve, _, _, csw_drop = ops.switch_step(
             state.csw_up_q, state.csw_gate.stage, inter_in,
-            state.csw_gate.draining, cap=scen.queue_cap, hi=scen.hi,
-            lo=scen.lo, serve_rate=4.0)
+            state.csw_gate.draining, valid=csw_valid,
+            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, serve_rate=4.0)
         acc["drops"] += jnp.sum(csw_drop)
         acc["csw_up_backlog"] += jnp.sum(state.csw_up_q)
         acc["csw_up_served"] += jnp.sum(cserve)
 
-        # uplink f of csw c lands on FC f. The FC routes traffic for
-        # cluster k down an ACTIVE (f, c') plane of that cluster (per-stage
-        # CAMs): weight by the cluster's csw-uplink activity and by the
-        # dest rack's active planes.
-        fc_in = jnp.sum(cserve, axis=0)                          # (NF,)
+        # uplink f of csw c lands on FC f (the csw_uplinks axis; == n_fc
+        # by the FBSite invariant). The FC routes traffic for cluster k
+        # down an ACTIVE (f, c') plane of that cluster (per-stage CAMs):
+        # weight by the cluster's csw-uplink activity and by the dest
+        # rack's active planes.
+        fc_in = jnp.sum(cserve, axis=0)                          # (CUP,)
         csw_stage_f = state.csw_gate.stage.astype(jnp.float32)
-        fc_w = (jnp.arange(NF)[None, :]
+        fc_w = (jnp.arange(CUP)[None, :]
                 < state.csw_gate.stage[:, None]) / csw_stage_f[:, None]
         # csw c's share of its cluster's down traffic = how much of the
-        # cluster's racks ride plane (c mod CPC)
-        csw_share = jnp.mean(plane_w_c, axis=1).reshape(NC)      # (NC,)
-        # total inter-cluster down traffic splits uniformly over clusters
-        down_cl = jnp.sum(fc_in) / n_clusters                    # scalar
+        # cluster's REAL racks ride plane (c mod csw_per_cluster)
+        csw_share = (jnp.sum(plane_w_c, axis=1) / rpcf).reshape(NC)
+        # total inter-cluster down traffic splits uniformly over the
+        # REAL clusters
+        down_cl = jnp.sum(fc_in) / nclf                          # scalar
         fc_down_add = down_cl * csw_share[None, :] * fc_w.T      # (NF,NC)
         fc_down_q = state.fc_down_q + fc_down_add
 
@@ -418,7 +565,7 @@ def make_sim_step(site: FBSite):
         fserve = jnp.minimum(fc_down_q, 4.0) * fc_active
         fc_down_q = fc_down_q - fserve
         stranded = jnp.where(~fc_active, fc_down_q, 0.0)
-        mig = jnp.minimum(jnp.sum(stranded), FC_RING_CAP)
+        mig = jnp.minimum(jnp.sum(stranded), scen.fc_ring)
         mfrac = mig / jnp.maximum(jnp.sum(stranded), 1e-9)
         fc_down_q = fc_down_q - stranded * mfrac
         fc_down_q = fc_down_q.at[0, :].add(
@@ -431,21 +578,36 @@ def make_sim_step(site: FBSite):
         # each rack's active planes (stage-aware, as above)
         per_csw_down = jnp.sum(fserve, axis=0)                   # (NC,)
         pw_cr = plane_w_c.transpose(0, 2, 1).reshape(NC, RPC)    # (NC,RPC)
-        pw_norm = pw_cr / jnp.maximum(
-            jnp.sum(pw_cr, axis=1, keepdims=True), 1e-9)
-        csw_down_q = csw_down_q + per_csw_down[:, None] * pw_norm
+        row_w = jnp.sum(pw_cr, axis=1)                           # (NC,)
+        pw_norm = pw_cr / jnp.maximum(row_w[:, None], 1e-9)
+        routable = row_w > 0.0
+        csw_down_q = csw_down_q + \
+            jnp.where(routable, per_csw_down, 0.0)[:, None] * pw_norm
+        # a csw can still drain FC backlog for a plane no rack currently
+        # rides (every rack staged below it after the queue built up);
+        # that traffic rides the cluster ring to the always-on plane 0
+        # rather than vanishing (conservation: injected == delivered +
+        # in-flight + drops)
+        orphan = jnp.where(routable, 0.0, per_csw_down)          # (NC,)
+        orphan_cl = jnp.sum(orphan.reshape(NCL, P), axis=1)      # (NCL,)
+        dest0 = pw_norm.reshape(NCL, P, RPC)[:, 0, :]            # (NCL,RPC)
+        csw_down_q = (csw_down_q.reshape(NCL, P, RPC)
+                      .at[:, 0, :].add(orphan_cl[:, None] * dest0)
+                      .reshape(NC, RPC))
+        acc["ring_pkts"] += jnp.sum(orphan_cl)
 
-        # 7. CSW down serve: link (r, c_in_cluster) active iff rsw
-        #    stage[r] > c; stranded traffic rides the cluster ring to c=0.
-        rsw_stage = state.rsw_gate.stage.reshape(n_clusters, RPC)
-        cidx = jnp.arange(CPC)[None, :, None]                    # cluster pos
-        down_act = (cidx < rsw_stage[:, None, :])                # (ncl,CPC,RPC)
-        dq = csw_down_q.reshape(n_clusters, CPC, RPC)
+        # 7. CSW down serve: link (r, c) active iff rsw stage[r] > c —
+        #    the plane axis is csw_per_cluster; stranded traffic rides
+        #    the cluster ring to c=0.
+        rsw_stage = state.rsw_gate.stage.reshape(NCL, RPC)
+        cidx = jnp.arange(P)[None, :, None]                      # plane pos
+        down_act = (cidx < rsw_stage[:, None, :])                # (NCL,P,RPC)
+        dq = csw_down_q.reshape(NCL, P, RPC)
         dserve = jnp.minimum(dq, 1.0) * down_act
         dq = dq - dserve
-        stranded_d = jnp.where(~down_act, dq, 0.0)               # (ncl,CPC,RPC)
-        tot_str = jnp.sum(stranded_d, axis=(1, 2))               # (ncl,)
-        migd = jnp.minimum(tot_str, float(RING_CAP))
+        stranded_d = jnp.where(~down_act, dq, 0.0)               # (NCL,P,RPC)
+        tot_str = jnp.sum(stranded_d, axis=(1, 2))               # (NCL,)
+        migd = jnp.minimum(tot_str, scen.csw_ring)
         dfrac = (migd / jnp.maximum(tot_str, 1e-9))[:, None, None]
         moved = stranded_d * dfrac
         dq = dq - moved
@@ -459,10 +621,9 @@ def make_sim_step(site: FBSite):
         # 8. node-level link gating (OS intercept: zero latency cost).
         # A server link is held on while its server has active flows (tx)
         # or receives traffic, with an idle timeout.
-        need = jnp.minimum(n_holding + delivered_r,
-                           float(s.servers_per_rack))
+        need = jnp.minimum(n_holding + delivered_r, scen.spr)
         node_on = jnp.maximum(
-            need, state.node_on - s.servers_per_rack / NODE_IDLE_TICKS)
+            need, state.node_on - scen.spr / NODE_IDLE_TICKS)
         acc["node_on"] += jnp.sum(node_on)
 
         # 9. watermark controllers. Per Sec III-B the backlog monitor
@@ -473,15 +634,18 @@ def make_sim_step(site: FBSite):
         # 40G down plane must open the next stage). gating_enabled is a
         # traced scenario knob: the controller always steps and the
         # result is selected, so LC/DC and always-on scenarios share one
-        # compiled program.
-        down_rc = csw_down_q.reshape(n_clusters, CPC, RPC) \
-            .transpose(0, 2, 1).reshape(R, CPC)              # (R, planes)
+        # compiled program. max_stage caps each switch at its REAL link
+        # count (padded hull links never activate).
+        down_rc = csw_down_q.reshape(NCL, P, RPC) \
+            .transpose(0, 2, 1).reshape(R, P)                # (R, planes)
         rsw_gated = gating.gate_step(
             state.rsw_gate, jnp.maximum(jnp.sum(rsw_q, axis=2), down_rc),
-            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell)
+            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell,
+            max_stage=rsw_max)
         csw_gated = gating.gate_step(
             state.csw_gate, jnp.maximum(csw_up_q, fc_down_q.T),
-            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell)
+            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell,
+            max_stage=csw_max)
 
         def sel(new, old):
             return jax.tree.map(
@@ -490,11 +654,18 @@ def make_sim_step(site: FBSite):
         rsw_gate = sel(rsw_gated, state.rsw_gate)
         csw_gate = sel(csw_gated, state.csw_gate)
 
-        rsw_pow = jnp.sum(rsw_gate.powered)
-        csw_pow = jnp.sum(csw_gate.powered)
+        rsw_pow = jnp.sum(
+            jnp.where(rack_valid[:, None], rsw_gate.powered, False))
+        csw_pow = jnp.sum(
+            jnp.where(csw_valid[:, None], csw_gate.powered, False))
         acc["rsw_powered"] += rsw_pow
         acc["csw_powered"] += csw_pow
-        frac_on = (rsw_pow + csw_pow) / float(R * L + NC * s.csw_uplinks)
+        # gated-link population of the REAL site:
+        # ncl*rpc*cpc (RSW-CSW) + ncl*cpc*nfc (CSW-FC)
+        cpcf = scen.cpc.astype(jnp.float32)
+        nfcf = scen.nfc.astype(jnp.float32)
+        n_gated = nclf * cpcf * (rpcf + nfcf)
+        frac_on = (rsw_pow + csw_pow) / n_gated
         acc["half_off_ticks"] += (frac_on <= 0.5)
         bucket = jnp.clip((frac_on * 4).astype(jnp.int32), 0, 3)
         acc["on_frac_hist"] += (jnp.arange(4) == bucket)  # one-hot, no scatter
@@ -507,16 +678,21 @@ def make_sim_step(site: FBSite):
 
 
 def _sweep_chunk_impl(site: FBSite, scen: Scenario, state: SimState,
-                      length: int) -> SimState:
+                      length: int, live) -> SimState:
     global TRACE_COUNT
     TRACE_COUNT += 1          # python side effect: counts traces only
     step = make_sim_step(site)
     vstep = jax.vmap(step)
 
-    def tick(st, _):
-        return vstep(scen, st), None
+    def tick(st, is_live):
+        # a dead (masked remainder) tick passes the carry through
+        # unchanged, so the tail chunk reuses this same trace; is_live
+        # is a scalar (not vmapped), so the cond genuinely branches —
+        # dead ticks skip the step instead of computing-and-discarding
+        return jax.lax.cond(is_live, lambda s: vstep(scen, s),
+                            lambda s: s, st), None
 
-    out, _ = jax.lax.scan(tick, state, None, length=length)
+    out, _ = jax.lax.scan(tick, state, live, length=length)
     return out
 
 
@@ -531,27 +707,32 @@ def _sweep_runner():
 
 
 def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
-              chunk_ticks: int = CHUNK_TICKS) -> list[dict]:
+              chunk_ticks: int = CHUNK_TICKS, return_state: bool = False):
     """Run every scenario of ``batch`` for n_ticks us in one vmapped,
     chunk-scanned program; returns one metrics dict per scenario (same
-    schema as ``run_sim``, plus the scenario ``label``).
+    schema as ``run_sim``, plus the scenario ``label``). With
+    ``return_state=True`` also returns the final device state (leaves
+    batched over scenarios) — e.g. for conservation audits of in-flight
+    packets.
 
-    Compiles once per (site, batch size, chunk length) and reuses the
-    executable across calls (see module docstring).
+    Compiles once per (hull, batch size, chunk length) and reuses the
+    executable across calls; a remainder tail runs the same fixed-length
+    chunk under a live-tick mask, so it never adds a trace (see module
+    docstring).
     """
-    site = batch.site
+    hull = batch.hull
     keys = jnp.stack([jax.random.PRNGKey(s) for s in batch.seeds])
-    state = jax.vmap(lambda sc, k: _init_state(site, sc, k))(
+    state = jax.vmap(lambda sc, k: _init_state(hull, sc, k))(
         batch.scen, keys)
 
     runner = _sweep_runner()
 
     acc64 = None
     chunk = max(1, min(chunk_ticks, n_ticks))
-    todo = n_ticks
-    while todo > 0:
-        length = min(chunk, todo)
-        state = runner(site, batch.scen, state, length)
+    done = 0
+    while done < n_ticks:
+        live = jnp.arange(chunk) < (n_ticks - done)
+        state = runner(hull, batch.scen, state, chunk, live)
         # fold this chunk's accumulators into float64 on the host and
         # zero them on device: bounds fp32 accumulation error and keeps
         # long runs memory-flat
@@ -563,18 +744,26 @@ def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
             acc64[k] += np.asarray(v, np.float64)
         state = state._replace(
             acc=jax.tree.map(jnp.zeros_like, state.acc))
-        todo -= length
+        done += chunk
 
-    return [
-        _finalize({k: v[i] for k, v in acc64.items()}, site, n_ticks,
-                  batch.gating[i], batch.names[i], batch.labels[i])
+    res = [
+        _finalize({k: v[i] for k, v in acc64.items()}, batch.sites[i],
+                  n_ticks, batch.gating[i], batch.names[i],
+                  batch.labels[i])
         for i in range(len(batch))
     ]
+    if return_state:
+        return res, jax.device_get(state)
+    return res
 
 
 def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
               trace: str, label: str | None = None) -> dict:
-    """Aggregate accumulators -> the paper's metrics (one scenario)."""
+    """Aggregate accumulators -> the paper's metrics (one scenario).
+
+    ``site`` is the scenario's REAL site (not the batch hull): all link
+    populations and power normalizations are the scenario's own.
+    """
     s = site
     T = float(n_ticks)
 
@@ -652,11 +841,11 @@ def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
     for sweeps, which traces once for the whole batch.
     """
     batch = make_batch([(params, seed)])
-    site = batch.site
+    hull = batch.hull          # == the site's own exact dims
     # concrete 0-d leaves close over the step -> per-scenario constants
     scen = jax.tree.map(lambda x: x[0], batch.scen)
-    state = _init_state(site, scen, jax.random.PRNGKey(seed))
-    step = make_sim_step(site)
+    state = _init_state(hull, scen, jax.random.PRNGKey(seed))
+    step = make_sim_step(hull)
 
     @jax.jit
     def go(state):
@@ -666,8 +855,8 @@ def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
 
     acc = jax.device_get(go(state).acc)
     return _finalize({k: np.asarray(v, np.float64) for k, v in acc.items()},
-                     site, n_ticks, batch.gating[0], batch.names[0],
-                     batch.labels[0])
+                     batch.sites[0], n_ticks, batch.gating[0],
+                     batch.names[0], batch.labels[0])
 
 
 def compare_traces(n_ticks: int = 200_000, seed: int = 0,

@@ -16,15 +16,50 @@ from repro.core import constants as C
 
 @dataclass(frozen=True)
 class FBSite:
+    """A (generalized) Fig 2 Clos site.
+
+    The wiring fixes two invariants: every RSW has exactly one uplink
+    per CSW of its cluster (``rsw_uplinks == csw_per_cluster`` — uplink
+    c IS the link to cluster-CSW c, the stage-c "plane"), and every CSW
+    has exactly one uplink per fabric core switch (``csw_uplinks ==
+    n_fc`` — uplink f IS the link to FC f). The uplink fields therefore
+    default to None and are derived; passing them explicitly is allowed
+    only when consistent (anything else would silently mis-route the
+    down-plane math, so ``__post_init__`` rejects it).
+    """
     n_clusters: int = 4
     racks_per_cluster: int = 32
     servers_per_rack: int = 48
     csw_per_cluster: int = 4
     n_fc: int = 4
-    rsw_uplinks: int = 4            # = csw_per_cluster (one per CSW): stages
-    csw_uplinks: int = 4            # = n_fc: stages
+    rsw_uplinks: int | None = None  # derived: = csw_per_cluster
+    csw_uplinks: int | None = None  # derived: = n_fc
     csw_ring_links: int = 8         # 10G per cluster ring
     fc_ring_links: int = 16         # 10G FC ring
+
+    def __post_init__(self):
+        if self.rsw_uplinks is None:
+            object.__setattr__(self, "rsw_uplinks", self.csw_per_cluster)
+        if self.csw_uplinks is None:
+            object.__setattr__(self, "csw_uplinks", self.n_fc)
+        for name in ("n_clusters", "racks_per_cluster", "servers_per_rack",
+                     "csw_per_cluster", "n_fc", "rsw_uplinks",
+                     "csw_uplinks"):
+            if int(getattr(self, name)) < 1:
+                raise ValueError(f"FBSite.{name} must be >= 1, got "
+                                 f"{getattr(self, name)}")
+        if self.rsw_uplinks != self.csw_per_cluster:
+            raise ValueError(
+                f"inconsistent FBSite: rsw_uplinks={self.rsw_uplinks} but "
+                f"csw_per_cluster={self.csw_per_cluster}; each RSW has one "
+                "uplink per cluster CSW (uplink c is the stage-c plane), "
+                "so the two must match — omit rsw_uplinks to derive it")
+        if self.csw_uplinks != self.n_fc:
+            raise ValueError(
+                f"inconsistent FBSite: csw_uplinks={self.csw_uplinks} but "
+                f"n_fc={self.n_fc}; each CSW has one uplink per fabric "
+                "core switch (uplink f lands on FC f), so the two must "
+                "match — omit csw_uplinks to derive it")
 
     @property
     def n_racks(self) -> int:

@@ -35,19 +35,20 @@ from jax.experimental import pallas as pl
 BIG = 1e30
 
 
-def _kernel(q_ref, stage_ref, drain_ref, arr_ref, cap_ref, hi_ref, lo_ref,
-            qo_ref, srv_ref, hi_o_ref, lo_o_ref, drop_ref, *,
-            n_links: int, n_comp: int, serve_rate: float):
+def _kernel(q_ref, stage_ref, drain_ref, valid_ref, arr_ref, cap_ref,
+            hi_ref, lo_ref, qo_ref, srv_ref, hi_o_ref, lo_o_ref,
+            drop_ref, *, n_links: int, n_comp: int, serve_rate: float):
     L, K = n_links, n_comp
     bs = q_ref.shape[0]
     q = q_ref[...].reshape(bs, L, K)
     stage = stage_ref[...]                          # (bs, 1) int32
     drain = drain_ref[...] != 0                     # (bs, 1)
+    valid = valid_ref[...] != 0                     # (bs, 1)
     arr = arr_ref[...]                              # (bs, K)
     cap = cap_ref[...]                              # (bs, 1)
 
     idx = jax.lax.broadcasted_iota(jnp.int32, (bs, L), 1)
-    act = idx < stage
+    act = (idx < stage) & valid
     top = idx == stage - 1
     usable = act & ~(drain & top & (stage > 1))
     qtot = jnp.sum(q, axis=2)                       # (bs, L)
@@ -62,7 +63,7 @@ def _kernel(q_ref, stage_ref, drain_ref, arr_ref, cap_ref, hi_ref, lo_ref,
     add_tot = jnp.sum(arr, axis=1, keepdims=True)   # (bs, 1)
     room = jnp.maximum(cap - mn, 0.0)
     scale = jnp.minimum(1.0, room / jnp.maximum(add_tot, 1e-9))
-    drop_ref[...] = add_tot * (1.0 - scale)
+    drop_ref[...] = add_tot * (1.0 - scale) * valid
     q = q + pick.astype(q.dtype)[..., None] \
         * (arr * scale)[:, None, :]
 
@@ -75,19 +76,22 @@ def _kernel(q_ref, stage_ref, drain_ref, arr_ref, cap_ref, hi_ref, lo_ref,
     qo_ref[...] = q.reshape(bs, L * K)
     srv_ref[...] = served.reshape(bs, L * K)
 
-    # (4) watermark triggers on post-serve backlogs
+    # (4) watermark triggers on post-serve backlogs; invalid switches
+    # never trigger (lo would otherwise fire vacuously on act==empty)
     qpost = qtot - serve_tot
     hi_o_ref[...] = jnp.any((qpost > hi_ref[...] * cap) & act, axis=1,
                             keepdims=True).astype(jnp.int32)
-    lo_o_ref[...] = jnp.all(jnp.where(act, qpost < lo_ref[...] * cap, True),
-                            axis=1, keepdims=True).astype(jnp.int32)
+    lo_o_ref[...] = (jnp.all(jnp.where(act, qpost < lo_ref[...] * cap,
+                                       True), axis=1, keepdims=True)
+                     & valid).astype(jnp.int32)
 
 
-def switch_step(queues, stage, arrivals, draining=None, *, cap=20.0,
-                hi=0.75, lo=0.22, serve_rate=1.0, block_s=128,
+def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
+                cap=20.0, hi=0.75, lo=0.22, serve_rate=1.0, block_s=128,
                 interpret=True):
     """queues (S, L, K) or (S, L); stage (S,) int32; arrivals (S, K) or
-    (S,); draining (S,) bool. Same contract as ref.switch_step_ref:
+    (S,); draining (S,) bool; valid (S,) bool padding mask (invalid
+    switches are inert). Same contract as ref.switch_step_ref:
     returns (new_queues, served, hi_trig, lo_trig, dropped)."""
     squeeze = queues.ndim == 2
     if squeeze:
@@ -96,9 +100,11 @@ def switch_step(queues, stage, arrivals, draining=None, *, cap=20.0,
     S, L, K = queues.shape
     if draining is None:
         draining = jnp.zeros((S,), bool)
+    if valid is None:
+        valid = jnp.ones((S,), bool)
 
     # pad the switch axis to the block size (idle switches: stage 1,
-    # empty queues, zero arrivals) and slice the outputs back
+    # empty queues, zero arrivals, valid=0) and slice the outputs back
     bs = min(block_s, _round_up(S, 8))
     Sp = _round_up(S, bs)
     pad = Sp - S
@@ -106,6 +112,7 @@ def switch_step(queues, stage, arrivals, draining=None, *, cap=20.0,
     qp = jnp.pad(queues, ((0, pad), (0, 0), (0, 0))).reshape(Sp, L * K)
     stage_p = jnp.pad(stage, (0, pad), constant_values=1)[:, None]
     drain_p = jnp.pad(draining, (0, pad)).astype(jnp.int32)[:, None]
+    valid_p = jnp.pad(valid, (0, pad)).astype(jnp.int32)[:, None]
     arr_p = jnp.pad(arrivals, ((0, pad), (0, 0)))
     def col(v):
         # scalar or per-switch (S,) knob -> padded (Sp, 1) operand column
@@ -122,7 +129,8 @@ def switch_step(queues, stage, arrivals, draining=None, *, cap=20.0,
     qo, srv, hi_t, lo_t, drop = pl.pallas_call(
         kern,
         grid=(Sp // bs,),
-        in_specs=[spec_lk, spec_1, spec_1, spec_k, spec_1, spec_1, spec_1],
+        in_specs=[spec_lk, spec_1, spec_1, spec_1, spec_k, spec_1, spec_1,
+                  spec_1],
         out_specs=[spec_lk, spec_lk, spec_1, spec_1, spec_1],
         out_shape=[
             jax.ShapeDtypeStruct((Sp, L * K), f32),
@@ -132,7 +140,7 @@ def switch_step(queues, stage, arrivals, draining=None, *, cap=20.0,
             jax.ShapeDtypeStruct((Sp, 1), f32),
         ],
         interpret=interpret,
-    )(qp, stage_p, drain_p, arr_p, col(cap), col(hi), col(lo))
+    )(qp, stage_p, drain_p, valid_p, arr_p, col(cap), col(hi), col(lo))
     qo = qo[:S].reshape(S, L, K)
     srv = srv[:S].reshape(S, L, K)
     if squeeze:

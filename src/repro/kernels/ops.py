@@ -42,22 +42,27 @@ def wkv(r, k, v, w, u, state, *, use_pallas=None, chunk=16):
     return _ref.wkv_ref(r, k, v, w, u, state)
 
 
-def switch_step(queues, stage, arrivals, draining=None, *, cap=20.0,
-                hi=0.75, lo=0.22, serve_rate=1.0, use_pallas=None):
+def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
+                cap=20.0, hi=0.75, lo=0.22, serve_rate=1.0,
+                use_pallas=None):
     """One LC/DC switch tick (the simulator's production datapath).
 
     Pallas on TPU, pure-jnp reference on CPU — identical semantics
     (tests/test_kernels.py pins the kernel to the oracle). See
     ref.switch_step_ref for the argument/return contract; queues may be
-    (S, L, K) component-split or plain (S, L)."""
+    (S, L, K) component-split or plain (S, L). ``valid`` is the (S,)
+    padding mask of heterogeneous-site batches (invalid switches are
+    inert)."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        return _sw.switch_step(queues, stage, arrivals, draining, cap=cap,
-                               hi=hi, lo=lo, serve_rate=serve_rate,
+        return _sw.switch_step(queues, stage, arrivals, draining,
+                               valid=valid, cap=cap, hi=hi, lo=lo,
+                               serve_rate=serve_rate,
                                interpret=not _on_tpu())
-    return _ref.switch_step_ref(queues, stage, arrivals, draining, cap=cap,
-                                hi=hi, lo=lo, serve_rate=serve_rate)
+    return _ref.switch_step_ref(queues, stage, arrivals, draining,
+                                valid=valid, cap=cap, hi=hi, lo=lo,
+                                serve_rate=serve_rate)
 
 
 def model_kernel_fns(use_pallas: bool = True) -> dict:

@@ -47,7 +47,8 @@ def attention_naive(q, k, v, *, causal=True, swa_window=0):
 
 
 def switch_step_ref(queues, stage, arrivals, draining=None, *,
-                    cap=20.0, hi=0.75, lo=0.22, serve_rate=1.0):
+                    valid=None, cap=20.0, hi=0.75, lo=0.22,
+                    serve_rate=1.0):
     """One switch tick for a tier of S switches with L output ports.
 
     queues:   (S, L, K) per-port backlogs split into K traffic
@@ -57,6 +58,12 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     arrivals: (S, K) — or (S,) with 2-D queues — per-switch arrival
               vector enqueued onto the min-backlog usable port.
     draining: (S,) bool; a draining top port serves but does not accept.
+    valid:    (S,) bool; padding mask for heterogeneous-site batches. An
+              invalid switch is inert: it accepts nothing, serves
+              nothing, raises no triggers, and its queues pass through
+              unchanged. Callers must feed invalid switches zero
+              arrivals (the enqueue is suppressed, so nonzero arrivals
+              there would be silently discarded without a drop count).
 
     Semantics per switch: (1) pick the usable port with the least total
     backlog, (2) enqueue the arrival vector there, proportionally scaled
@@ -75,9 +82,11 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     S, L, K = queues.shape
     if draining is None:
         draining = jnp.zeros((S,), bool)
+    if valid is None:
+        valid = jnp.ones((S,), bool)
 
-    act = jnp.arange(L)[None, :] < stage[:, None]
-    usable = gating.usable_links(stage, draining, L)
+    act = (jnp.arange(L)[None, :] < stage[:, None]) & valid[:, None]
+    usable = gating.usable_links(stage, draining, L) & valid[:, None]
     qtot = jnp.sum(queues, axis=2)                      # (S, L)
 
     # (1) min-backlog usable port, ties to the lowest index
@@ -90,7 +99,7 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     add_tot = jnp.sum(arrivals, axis=1)                 # (S,)
     room = jnp.maximum(cap - mn[:, 0], 0.0)
     scale = jnp.minimum(1.0, room / jnp.maximum(add_tot, 1e-9))
-    dropped = add_tot * (1.0 - scale)
+    dropped = add_tot * (1.0 - scale) * valid
     q = queues + pick.astype(queues.dtype)[..., None] \
         * (arrivals * scale[:, None])[:, None, :]
 
@@ -103,9 +112,11 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     served = q * frac[..., None]
     q = q - served
 
-    # (4) watermark triggers on post-serve backlogs (shared definition)
+    # (4) watermark triggers on post-serve backlogs (shared definition);
+    # invalid switches never trigger
     hi_t, lo_t = gating.watermark_triggers(qtot - serve_tot, stage,
                                            cap=cap, hi=hi, lo=lo)
+    hi_t, lo_t = hi_t & valid, lo_t & valid
     if squeeze:
         q, served = q[..., 0], served[..., 0]
     return (q, served, hi_t.astype(jnp.int32), lo_t.astype(jnp.int32),

@@ -89,6 +89,18 @@ def test_property_connectivity_and_power_superset(qs, stage0):
         assert powered[0]
 
 
+def test_max_stage_caps_per_switch():
+    """Per-switch max_stage (the multi-site real-link ceiling): a padded
+    switch never activates links beyond its site's own link count."""
+    s = gating.gate_init(3, 4)
+    hot = jnp.full((3, 4), 19.0)
+    cap = jnp.array([1, 2, 4], jnp.int32)
+    for _ in range(60):
+        s = gating.gate_step(s, hot, cap=20, up_delay=1, max_stage=cap)
+        assert np.all(np.asarray(s.stage) <= np.asarray(cap))
+    np.testing.assert_array_equal(np.asarray(s.stage), np.asarray(cap))
+
+
 @given(st.integers(0, 3))
 def test_property_monotone_under_sustained_load(seed):
     """Sustained saturation drives the stage to max and keeps it there."""

@@ -120,6 +120,31 @@ def test_switch_step_components_vs_ref(S, L, K, serve_rate, block):
                                    np.asarray(y, np.float32), atol=1e-6)
 
 
+@pytest.mark.parametrize("S,L,K,block", [(64, 4, 2, 32), (100, 3, 1, 128)])
+def test_switch_step_valid_mask_vs_ref(S, L, K, block):
+    """The multi-site padding mask: Pallas matches the ref oracle, and
+    invalid switches are inert (queues pass through, nothing served,
+    no triggers, no drops)."""
+    ks = jax.random.split(jax.random.PRNGKey(13), 4)
+    q = jax.random.uniform(ks[0], (S, L, K)) * 15
+    stage = jax.random.randint(ks[1], (S,), 1, L + 1)
+    valid = jax.random.bernoulli(ks[2], 0.6, (S,))
+    # contract: invalid switches receive zero arrivals
+    arr = jax.random.uniform(ks[3], (S, K)) * 2 * valid[:, None]
+    a = switch_step(q, stage, arr, valid=valid, block_s=block)
+    b = ref.switch_step_ref(q, stage, arr, valid=valid)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-6)
+    nq, served, hi_t, lo_t, drop = b
+    inv = ~np.asarray(valid)
+    np.testing.assert_allclose(np.asarray(nq)[inv], np.asarray(q)[inv])
+    assert np.all(np.asarray(served)[inv] == 0)
+    assert np.all(np.asarray(hi_t)[inv] == 0)
+    assert np.all(np.asarray(lo_t)[inv] == 0)
+    assert np.all(np.asarray(drop)[inv] == 0)
+
+
 def test_switch_step_per_switch_cap_vs_ref():
     """cap may be a per-switch array; must survive the padded block."""
     ks = jax.random.split(jax.random.PRNGKey(11), 3)

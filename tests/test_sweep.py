@@ -49,7 +49,7 @@ def test_sweep_scenarios_are_independent(sweep_results):
 def test_sweep_compiles_once():
     """The one-compile contract: same-shaped sweeps with different knob
     values (traces, watermarks, seeds) reuse one traced program, and
-    chunking does not add traces."""
+    chunking — including a masked remainder tail — does not add traces."""
     batch_a = S.sweep_grid(traces=("fb_hadoop", "fb_web"), seeds=(0,))
     batch_b = S.sweep_grid(traces=("microsoft", "university"), seeds=(3,),
                            hi=0.5, lo=0.1)
@@ -59,16 +59,25 @@ def test_sweep_compiles_once():
     assert n1 - n0 == 1
     S.run_sweep(batch_b, 600, chunk_ticks=200)   # same shapes: 0 traces
     assert S.TRACE_COUNT == n1
+    # remainder: 500 = 2*200 + a masked 100-tick tail, SAME fixed-length
+    # chunk program — still zero new traces (ROADMAP item closed)
+    S.run_sweep(batch_b, 500, chunk_ticks=200)
+    assert S.TRACE_COUNT == n1
 
 
 def test_chunked_matches_unchunked():
-    """Accumulator folding at chunk boundaries must not change metrics."""
+    """Accumulator folding at chunk boundaries must not change metrics —
+    with and without a remainder tail chunk."""
     batch = S.sweep_grid(traces=("fb_hadoop",), gating=(True,))
     whole = S.run_sweep(batch, 1_000, chunk_ticks=10_000)[0]
     chunked = S.run_sweep(batch, 1_000, chunk_ticks=250)[0]
+    # 1000 = 3*300 + 100: the tail runs the same 300-tick program with
+    # the last 200 ticks masked dead (carry passes through unchanged)
+    remainder = S.run_sweep(batch, 1_000, chunk_ticks=300)[0]
     for k in PARITY_KEYS:
-        a, b = whole[k], chunked[k]
+        a, b, c = whole[k], chunked[k], remainder[k]
         assert abs(a - b) <= 1e-6 * max(abs(a), abs(b), 1.0), (k, a, b)
+        assert abs(a - c) <= 1e-6 * max(abs(a), abs(c), 1.0), (k, a, c)
 
 
 def test_rate_scale_is_a_batch_axis():

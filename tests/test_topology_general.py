@@ -1,0 +1,134 @@
+"""Topology-general sweeps: FBSite invariant enforcement, conservation
+on deliberately non-default (yet wiring-consistent) sites, and the
+multi-site padded batch (one compile + single-site parity)."""
+import numpy as np
+import pytest
+
+from repro.core import simulator as S
+from repro.core.topology import FBSite
+from repro.core.traffic import TRAFFIC_SPECS
+
+# non-default square sites: different cluster counts, rack counts, plane
+# counts and FC counts than the Fig 2 default (4x32, c4, f4)
+SITE_A = FBSite(n_clusters=2, racks_per_cluster=8, servers_per_rack=8,
+                csw_per_cluster=3, n_fc=2, csw_ring_links=4,
+                fc_ring_links=8)
+SITE_B = FBSite(n_clusters=3, racks_per_cluster=4, servers_per_rack=6,
+                csw_per_cluster=2, n_fc=3, csw_ring_links=4,
+                fc_ring_links=8)
+
+
+# ---- FBSite wiring invariants ------------------------------------------
+
+def test_uplinks_derived_from_wiring():
+    assert FBSite().rsw_uplinks == 4 and FBSite().csw_uplinks == 4
+    s = FBSite(csw_per_cluster=3, n_fc=2)
+    assert s.rsw_uplinks == 3            # one uplink per cluster CSW
+    assert s.csw_uplinks == 2            # one uplink per fabric core
+    # explicitly passing CONSISTENT values is allowed
+    assert FBSite(rsw_uplinks=4, csw_uplinks=4) == FBSite()
+
+
+def test_inconsistent_uplinks_rejected():
+    with pytest.raises(ValueError, match="rsw_uplinks"):
+        FBSite(rsw_uplinks=8)            # csw_per_cluster stays 4
+    with pytest.raises(ValueError, match="csw_uplinks"):
+        FBSite(csw_uplinks=2)            # n_fc stays 4
+    with pytest.raises(ValueError, match="must be >= 1"):
+        FBSite(n_clusters=0)
+
+
+def test_make_batch_rejects_mixed_sites():
+    spec = TRAFFIC_SPECS["fb_hadoop"]
+    with pytest.raises(AssertionError, match="make_multi_site_batch"):
+        S.make_batch([(S.SimParams(spec=spec, site=SITE_A), 0),
+                      (S.SimParams(spec=spec, site=SITE_B), 0)])
+
+
+# ---- conservation regression (injected == delivered + in-flight + drops)
+
+def _conservation_error(site, ticks, rate_scale=1.0):
+    runs = [(S.SimParams(spec=TRAFFIC_SPECS["fb_hadoop"], site=site,
+                         rate_scale=rate_scale), 0)]
+    res, st = S.run_sweep(S.make_batch(runs), ticks, return_state=True)
+    r = res[0]
+    in_flight = sum(float(np.sum(np.asarray(q)[0]))
+                    for q in (st.rsw_q, st.csw_up_q, st.csw_down_q,
+                              st.fc_down_q))
+    inj = r["injected_pkts"]
+    drops = r["drop_frac"] * inj
+    err = inj - (r["delivered_pkts"] + drops + in_flight)
+    assert inj > 0, "no traffic injected — test is vacuous"
+    return abs(err) / max(inj, 1e-9)
+
+
+def test_conservation_non_default_site():
+    """A non-square-default site must not leak or invent packets: the
+    step-4/6/7 down-plane math runs on the csw_per_cluster plane axis
+    and the csw_uplinks FC axis, not the conflated defaults."""
+    assert _conservation_error(SITE_A, 3_000, rate_scale=1.5) < 1e-3
+
+
+def test_conservation_default_site():
+    assert _conservation_error(FBSite(), 2_000) < 1e-3
+
+
+# ---- multi-site batch: one compile + single-site parity ----------------
+
+@pytest.fixture(scope="module")
+def mixed_runs():
+    """2 distinct sites x {LC/DC, always-on}, mixed specs and seeds."""
+    h, u = TRAFFIC_SPECS["fb_hadoop"], TRAFFIC_SPECS["university"]
+    return [(S.SimParams(spec=h, site=SITE_A), 0),
+            (S.SimParams(spec=h, site=SITE_A, gating_enabled=False), 0),
+            (S.SimParams(spec=u, site=SITE_B, rate_scale=1.5), 1),
+            (S.SimParams(spec=u, site=SITE_B, gating_enabled=False), 1)]
+
+
+@pytest.fixture(scope="module")
+def mixed_results(mixed_runs):
+    """One multi-site sweep with a remainder tail (700 = 2*300 + 100);
+    captures the trace count delta around the run."""
+    n0 = S.TRACE_COUNT
+    res = S.run_sweep(S.make_multi_site_batch(mixed_runs), 700,
+                      chunk_ticks=300)
+    return res, S.TRACE_COUNT - n0
+
+
+def test_multi_site_batch_compiles_once(mixed_results):
+    """A mixed batch of heterogeneous sites is ONE vmapped compile,
+    including the masked remainder tail chunk."""
+    _, traces = mixed_results
+    assert traces == 1
+
+
+def test_multi_site_labels_tagged(mixed_results):
+    res, _ = mixed_results
+    assert res[0]["label"].endswith("|2x8c3f2")
+    assert res[2]["label"].endswith("|3x4c2f3")
+    assert len({r["label"] for r in res}) == len(res)
+
+
+def test_multi_site_parity_with_single_site(mixed_runs, mixed_results):
+    """Each scenario padded into the hull must reproduce its single-site
+    run_sweep metrics: padding rows are inert and the per-rack PRNG is
+    keyed on logical rack ids, not hull positions."""
+    res, _ = mixed_results
+    for run, mixed in zip(mixed_runs, res):
+        single = S.run_sweep(S.make_batch([run]), 700, chunk_ticks=300)[0]
+        for k in S.PARITY_KEYS:
+            a, b = single[k], mixed[k]
+            assert abs(a - b) <= 1e-3 * max(abs(a), abs(b), 1e-9), \
+                (mixed["label"], k, a, b)
+
+
+def test_multi_site_baseline_vs_gated(mixed_results):
+    """Per-site sanity: always-on scenarios show no savings; gated ones
+    save energy on whatever topology they run."""
+    res, _ = mixed_results
+    assert res[1]["switch_energy_savings_frac"] == 0.0
+    assert res[3]["switch_energy_savings_frac"] == 0.0
+    assert 0.0 <= res[0]["switch_energy_savings_frac"] <= 0.75
+    # stage 1 of a 3-plane site floors at 1/3 on; of a 2-plane at 1/2
+    assert res[0]["rsw_link_on_frac"] >= 1.0 / 3 - 1e-9
+    assert res[2]["rsw_link_on_frac"] >= 0.5 - 1e-9
