@@ -24,6 +24,14 @@ def main():
     print(f"latency: {lc['mean_latency_us']:.2f} us vs "
           f"{base['mean_latency_us']:.2f} us "
           f"({lc['mean_latency_us']/base['mean_latency_us']-1:+.1%})")
+    print(f"delay distribution (in-scan histogram): "
+          f"p50 {lc['delay_p50_us']:.2f} / p95 {lc['delay_p95_us']:.2f} "
+          f"/ p99 {lc['delay_p99_us']:.2f} us "
+          f"(always-on p99 {base['delay_p99_us']:.2f} us)")
+    print(f"delay attribution: queueing {lc['delay_queue_us']:.3f} us, "
+          f"laser/CDR wake stalls {lc['delay_wake_stall_us']:.4f} us "
+          f"({lc['wake_stall_frac']:.2%} of pkts), "
+          f"ring detours {lc['delay_ring_us']:.3f} us")
     print(f"fraction of time >=half the gated links are off: "
           f"{lc['half_off_frac']:.0%}")
 

@@ -32,6 +32,15 @@ P_PHY_W = 0.8              # switch PHY per port
 P_NIC_W = 10.0             # server NIC electronics
 P_SWITCH_ASIC_W = 28.0     # switch ASIC + CPU chips
 
+# --- in-scan packet-delay histogram (bounded-memory distributions) --------
+# Per-tick delay samples are binned into a fixed log-spaced histogram so a
+# chunked scan can emit full latency distributions (p50/p95/p99, Fig 10
+# tails) without unbounding memory. Bin 0 is [0, MIN); bin i >= 1 covers
+# [MIN * 2**((i-1)/BPO), MIN * 2**(i/BPO)); the last bin absorbs overflow.
+DELAY_HIST_BINS = 48
+DELAY_HIST_MIN_US = 4.0          # just under the 5.75 us stack+wire floor
+DELAY_HIST_BINS_PER_OCTAVE = 6   # ~12% resolution per bin, range ~900 us
+
 # --- watermarks (Sec V) ---------------------------------------------------
 QUEUE_CAP_PKTS = 20        # output queue capacity (pkts)
 HI_WATERMARK = 0.75        # stage-up threshold (75% buffer utilization)

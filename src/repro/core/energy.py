@@ -123,5 +123,8 @@ def dc_savings(transceiver_on_frac: float, util: float = 0.30) -> dict:
         )
     avg_links = sum(r.savings_links_only for r in out.values()) / len(out)
     avg_ext = sum(r.savings_with_phy_nic for r in out.values()) / len(out)
-    out["average"] = DCEnergyResult(util, 0.0, avg_links, avg_ext)
+    # the "average" row must carry the real mean transceiver fraction —
+    # a 0.0 placeholder silently poisons consumers that average it
+    avg_frac = sum(r.transceiver_frac for r in out.values()) / len(out)
+    out["average"] = DCEnergyResult(util, avg_frac, avg_links, avg_ext)
     return out

@@ -64,6 +64,20 @@ def active_mask(state: GateState, n_links: int) -> jnp.ndarray:
     return usable_links(state.stage, state.draining, n_links)
 
 
+def wake_stall_ticks(state: GateState) -> jnp.ndarray:
+    """(S,) float32: remaining ticks of an in-flight stage-up.
+
+    The wake stall a packet arriving NOW inherits from the pending
+    ``STAGE_UP_DELAY`` transition (control msg + ack + laser turn-on +
+    CDR lock): positive only while a link is rising, i.e. the extra
+    capacity the hi watermark already asked for is not live yet. The
+    single definition used by the simulator's delay-attribution
+    accumulators; with gating disabled ``up_timer`` never leaves 0, so
+    the attribution is exactly zero.
+    """
+    return state.up_timer.astype(jnp.float32)
+
+
 def watermark_triggers(queues: jnp.ndarray, stage: jnp.ndarray,
                        *, cap: float, hi: float, lo: float):
     """Shared hi/lo backlog-monitor definition (Sec III-B).

@@ -30,6 +30,49 @@ mean backlog / delivered rate) plus fixed per-hop wire/pipeline/stack
 latencies; the paper reports mean packet delivery latency, which this
 estimates directly.
 
+In-scan packet-delay distributions
+----------------------------------
+The paper's headline tradeoff ("60% power saved at the cost of 6%
+higher delay") is a statement about *distributions*, not just means:
+the laser/CDR wake stall behind ``STAGE_UP_DELAY`` shows up in the
+latency TAIL. Every tick the step therefore draws one delay sample per
+rack and destination class (intra-cluster / inter-cluster), weighted by
+the packets injected there that tick:
+
+    d = STACK_US + hops * WIRE_HOP_US        (fixed path cost)
+      + enq_wait(RSW) + down_wait(CSW->rack) (queueing, kernel-fed)
+      [+ enq_wait(CSW up) + fc_wait]         (inter-cluster only)
+      + wake_stall(RSW) [+ wake_stall(CSW)]  (gating-attributed)
+
+The queue-wait terms come from the SAME oracle-checked kernel as the
+datapath: ``ops.switch_step`` emits per-switch backlog-age (``enq_wait``,
+what an arrival queues behind) and post-serve occupancy moments. The
+wake-stall terms are ``gating.wake_stall_ticks`` — the remaining ticks
+of an in-flight stage-up — so with gating disabled the attribution is
+exactly zero. Ring-detour hops are attributed separately in
+``_finalize`` from the ring counters (a scalar mean, not in the
+histogram).
+
+Samples are binned into a fixed log-spaced histogram
+(``constants.DELAY_HIST_BINS`` = 48 bins; bin 0 is
+[0, DELAY_HIST_MIN_US); bin i covers [MIN * 2**((i-1)/BPO),
+MIN * 2**(i/BPO)) with BPO = DELAY_HIST_BINS_PER_OCTAVE = 6; the last
+bin absorbs overflow; edges in ``DELAY_BIN_EDGES_US``). The histogram
+is an ordinary accumulator: folded into float64 at chunk boundaries
+like every other one, so memory stays bounded for arbitrarily long
+runs. ``_finalize`` extracts log-interpolated ``delay_p50_us`` /
+``delay_p95_us`` / ``delay_p99_us``, the normalized ``delay_hist``,
+and the attribution split ``delay_queue_us`` (queueing) /
+``delay_wake_stall_us`` (STAGE_UP_DELAY stalls) / ``delay_ring_us``
+(ring-detour hops), plus ``wake_stall_frac`` (fraction of sampled
+packets that arrived during a stage-up) and per-tier occupancy
+mean/variance from the kernel's moment outputs.
+
+``delay_mean_sampled_us`` (the histogram's own mean) and
+``mean_latency_us`` (Little's law) are different estimators of the same
+quantity and deliberately both reported: the first carries attribution
+and tails, the second is the paper's original headline metric.
+
 Batched multi-scenario sweeps
 -----------------------------
 Every per-scenario knob — the TrafficSpec fields, ``gating_enabled``,
@@ -106,7 +149,9 @@ CHUNK_TICKS = 10_000      # default scan chunk (accumulator fold period)
 
 #: bump when the step semantics change — cached results keyed on an
 #: older version (benchmarks/simcache.py) are invalidated
-SIM_SCHEMA_VERSION = 2
+#: (v3: in-scan delay histograms + wake-stall attribution, corrected
+#: half-open on_frac_hist buckets)
+SIM_SCHEMA_VERSION = 3
 
 #: number of times the sweep step has been traced (the one-compile probe)
 TRACE_COUNT = 0
@@ -118,7 +163,45 @@ PARITY_KEYS = (
     "mean_latency_us", "injected_pkts", "delivered_pkts", "drop_frac",
     "switch_energy_savings_frac", "rsw_link_on_frac", "csw_link_on_frac",
     "node_link_on_frac", "transceiver_power_w", "half_off_frac",
+    "delay_p50_us", "delay_p99_us", "delay_queue_us",
+    "delay_wake_stall_us",
 )
+
+#: histogram bin edges in us (len DELAY_HIST_BINS + 1; see module
+#: docstring). Bin i covers [edge[i], edge[i+1]); the last bin also
+#: absorbs anything beyond the final edge.
+DELAY_BIN_EDGES_US = np.concatenate([
+    [0.0],
+    C.DELAY_HIST_MIN_US
+    * 2.0 ** (np.arange(C.DELAY_HIST_BINS, dtype=np.float64)
+              / C.DELAY_HIST_BINS_PER_OCTAVE)])
+
+
+def _delay_hist_add(hist, d, w):
+    """Bin weighted delay samples into the log-spaced histogram.
+
+    d, w: (N,) sample values (us) and packet weights. Dense one-hot
+    accumulation (no scatter, same trick as on_frac_hist); zero-weight
+    rows contribute nothing, so padded hull rows are inert by
+    construction.
+    """
+    # the 1e-4 nudge keeps exact edge values in their own (half-open)
+    # bin under f32 log2 rounding; it shifts edges by ~0.001%, far
+    # below the ~12% bin resolution
+    idx = jnp.clip(
+        jnp.floor(jnp.log2(jnp.maximum(d, 1e-9) / C.DELAY_HIST_MIN_US)
+                  * C.DELAY_HIST_BINS_PER_OCTAVE + 1e-4),
+        -1, C.DELAY_HIST_BINS - 2).astype(jnp.int32) + 1
+    onehot = jnp.arange(C.DELAY_HIST_BINS)[None, :] == idx[:, None]
+    return hist + jnp.sum(w[:, None] * onehot, axis=0)
+
+
+def on_frac_bucket(frac_on):
+    """Quartile bucket of an on-fraction: (0,25], (25,50], (50,75],
+    (75,100] — half-open-LEFT intervals, matching the on_frac_hist
+    labels (an exact 25% boundary belongs to the lower bucket; 0 falls
+    into the first)."""
+    return jnp.clip(jnp.ceil(frac_on * 4.0).astype(jnp.int32) - 1, 0, 3)
 
 
 class Scenario(NamedTuple):
@@ -377,6 +460,18 @@ def _init_state(hull: FBSite, scen: Scenario, key) -> SimState:
         "node_on": jnp.zeros(()),
         "half_off_ticks": jnp.zeros(()),
         "on_frac_hist": jnp.zeros((4,)),   # (0-25,25-50,50-75,75-100]% on
+        # in-scan packet-delay distribution (log-spaced bins, see module
+        # docstring) + the attribution split feeding _finalize
+        "delay_hist": jnp.zeros((C.DELAY_HIST_BINS,)),
+        "delay_sum": jnp.zeros(()),        # sum w * d (us-packets)
+        "delay_wt": jnp.zeros(()),         # total sampled packets
+        "delay_wt_inter": jnp.zeros(()),   # inter-cluster sampled packets
+        "delay_queue_sum": jnp.zeros(()),  # queue-wait part of delay_sum
+        "delay_stall_sum": jnp.zeros(()),  # wake-stall part of delay_sum
+        "wake_stall_pkts": jnp.zeros(()),  # packets arriving mid stage-up
+        # post-serve occupancy moments from the switch kernel
+        "rsw_occ_m1": jnp.zeros(()), "rsw_occ_m2": jnp.zeros(()),
+        "csw_occ_m1": jnp.zeros(()), "csw_occ_m2": jnp.zeros(()),
     }
     return SimState(
         key=key,
@@ -491,13 +586,16 @@ def make_sim_step(hull: FBSite):
         # 2+3. RSW datapath tick: min-backlog enqueue of the [intra,
         # inter] arrival split + 1 pkt/tick serve per active uplink —
         # the shared switch-step kernel (Pallas on TPU, ref on CPU).
-        rsw_q, served_split, _, _, rsw_drop = ops.switch_step(
+        (rsw_q, served_split, _, _, rsw_drop, rsw_wait, rsw_m1,
+         rsw_m2) = ops.switch_step(
             state.rsw_q, state.rsw_gate.stage, by_dest[:, 1:],
             state.rsw_gate.draining, valid=rack_valid,
             cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, serve_rate=1.0)
         acc["drops"] += jnp.sum(rsw_drop)
         acc["rsw_backlog"] += jnp.sum(rsw_q) + jnp.sum(served_split)
         acc["rsw_served"] += jnp.sum(served_split)
+        acc["rsw_occ_m1"] += jnp.sum(rsw_m1)
+        acc["rsw_occ_m2"] += jnp.sum(rsw_m2)
 
         # uplink c of rack r lands on CSW (cluster(r), c): the uplink
         # axis IS the csw_per_cluster plane axis (FBSite invariant)
@@ -531,13 +629,16 @@ def make_sim_step(hull: FBSite):
 
         # 5. CSW uplink datapath tick (40G: 4 pkt/tick) -> FC, through
         # the same shared switch-step kernel (single component).
-        csw_up_q, cserve, _, _, csw_drop = ops.switch_step(
+        (csw_up_q, cserve, _, _, csw_drop, csw_wait, csw_m1,
+         csw_m2) = ops.switch_step(
             state.csw_up_q, state.csw_gate.stage, inter_in,
             state.csw_gate.draining, valid=csw_valid,
             cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, serve_rate=4.0)
         acc["drops"] += jnp.sum(csw_drop)
         acc["csw_up_backlog"] += jnp.sum(state.csw_up_q)
         acc["csw_up_served"] += jnp.sum(cserve)
+        acc["csw_occ_m1"] += jnp.sum(csw_m1)
+        acc["csw_occ_m2"] += jnp.sum(csw_m2)
 
         # uplink f of csw c lands on FC f (the csw_uplinks axis; == n_fc
         # by the FBSite invariant). The FC routes traffic for cluster k
@@ -626,6 +727,60 @@ def make_sim_step(hull: FBSite):
             need, state.node_on - scen.spr / NODE_IDLE_TICKS)
         acc["node_on"] += jnp.sum(node_on)
 
+        # 8.5 in-scan delay sampling (see module docstring): one sample
+        # per rack per destination class for the packets injected THIS
+        # tick, fed by the kernel's backlog-age taps plus the
+        # gating-attributed wake stall. (R, planes) view of the CSW down
+        # queues each rack faces — shared with the step-9 RSW trigger.
+        down_rc = csw_down_q.reshape(NCL, P, RPC) \
+            .transpose(0, 2, 1).reshape(R, P)                # (R, planes)
+        # queue waits: RSW enqueue (kernel), CSW down plane-weighted
+        # (1 pkt/tick links), CSW uplink arrival-weighted per cluster,
+        # FC capacity-normalized (4 pkt/tick per active real link)
+        down_wait = jnp.sum(plane_w * down_rc, axis=1)           # (R,)
+        win = inter_in.reshape(NCL, P)
+
+        def cl_avg(x):
+            # arrival-weighted per-cluster mean over the cluster's CSWs
+            return jnp.sum(win * x.reshape(NCL, P), axis=1) \
+                / jnp.maximum(jnp.sum(win, axis=1), 1e-9)        # (NCL,)
+
+        w_csw_cl = cl_avg(csw_wait)
+        fc_cap = 4.0 * jnp.sum((fc_active & csw_valid[None, :])
+                               .astype(jnp.float32))
+        fc_wait = jnp.sum(fc_down_q) / jnp.maximum(fc_cap, 1e-9)
+        # wake stalls: remaining STAGE_UP_DELAY ticks of an in-flight
+        # stage-up at the switches this rack's packets traverse; exactly
+        # zero with gating disabled (up_timer never leaves 0, and the
+        # attribution is masked besides)
+        g_on = scen.gating_enabled
+        stall_rsw = jnp.where(g_on, gating.wake_stall_ticks(
+            state.rsw_gate), 0.0)                                # (R,)
+        stall_csw = jnp.where(g_on, gating.wake_stall_ticks(
+            state.csw_gate), 0.0)                                # (NC,)
+        stall_csw_cl = cl_avg(stall_csw)
+
+        def per_rack(x_cl):                                      # (NCL,)->(R,)
+            return jnp.broadcast_to(x_cl[:, None], (NCL, RPC)).reshape(R)
+
+        wt_i, wt_x = by_dest[:, 1], by_dest[:, 2]      # intra-cl / inter
+        q_i = rsw_wait + down_wait                     # queue-wait parts
+        q_x = q_i + per_rack(w_csw_cl) + fc_wait
+        s_i = stall_rsw                                # wake-stall parts
+        s_x = stall_rsw + per_rack(stall_csw_cl)
+        base_i = STACK_US + 4.0 * WIRE_HOP_US
+        d_i = base_i + q_i + s_i
+        d_x = base_i + 2.0 * WIRE_HOP_US + q_x + s_x
+        hist = _delay_hist_add(acc["delay_hist"], d_i, wt_i)
+        acc["delay_hist"] = _delay_hist_add(hist, d_x, wt_x)
+        acc["delay_sum"] += jnp.sum(wt_i * d_i) + jnp.sum(wt_x * d_x)
+        acc["delay_wt"] += jnp.sum(wt_i) + jnp.sum(wt_x)
+        acc["delay_wt_inter"] += jnp.sum(wt_x)
+        acc["delay_queue_sum"] += jnp.sum(wt_i * q_i) + jnp.sum(wt_x * q_x)
+        acc["delay_stall_sum"] += jnp.sum(wt_i * s_i) + jnp.sum(wt_x * s_x)
+        acc["wake_stall_pkts"] += jnp.sum(wt_i * (s_i > 0)) \
+            + jnp.sum(wt_x * (s_x > 0))
+
         # 9. watermark controllers. Per Sec III-B the backlog monitor
         # watches ALL output queues of a switch: the RSW trigger combines
         # its uplink queues with the CSW down-queue pressure on each
@@ -636,8 +791,6 @@ def make_sim_step(hull: FBSite):
         # result is selected, so LC/DC and always-on scenarios share one
         # compiled program. max_stage caps each switch at its REAL link
         # count (padded hull links never activate).
-        down_rc = csw_down_q.reshape(NCL, P, RPC) \
-            .transpose(0, 2, 1).reshape(R, P)                # (R, planes)
         rsw_gated = gating.gate_step(
             state.rsw_gate, jnp.maximum(jnp.sum(rsw_q, axis=2), down_rc),
             cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell,
@@ -667,7 +820,10 @@ def make_sim_step(hull: FBSite):
         n_gated = nclf * cpcf * (rpcf + nfcf)
         frac_on = (rsw_pow + csw_pow) / n_gated
         acc["half_off_ticks"] += (frac_on <= 0.5)
-        bucket = jnp.clip((frac_on * 4).astype(jnp.int32), 0, 3)
+        # half-open-LEFT quartiles (0,25],(25,50],(50,75],(75,100]: an
+        # exact boundary (e.g. the all-floor 25% state) belongs to the
+        # LOWER bucket, matching the histogram labels
+        bucket = on_frac_bucket(frac_on)
         acc["on_frac_hist"] += (jnp.arange(4) == bucket)  # one-hot, no scatter
 
         return SimState(key, burst_on, flow_rem, flow_dest, flow_fast,
@@ -757,6 +913,23 @@ def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
     return res
 
 
+def _hist_quantile(hist: np.ndarray, q: float) -> float:
+    """Quantile of a log-binned delay histogram (DELAY_BIN_EDGES_US),
+    log-linearly interpolated within the crossing bin."""
+    total = float(np.sum(hist))
+    if total <= 0.0:
+        return 0.0
+    cdf = np.cumsum(hist) / total
+    i = min(int(np.searchsorted(cdf, q)), len(hist) - 1)
+    lo_e, hi_e = DELAY_BIN_EDGES_US[i], DELAY_BIN_EDGES_US[i + 1]
+    prev = float(cdf[i - 1]) if i > 0 else 0.0
+    frac = (q - prev) / max(float(cdf[i]) - prev, 1e-12)
+    frac = min(max(frac, 0.0), 1.0)
+    if lo_e <= 0.0:                       # bin 0 is linear [0, MIN)
+        return float(hi_e * frac)
+    return float(lo_e * (hi_e / lo_e) ** frac)
+
+
 def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
               trace: str, label: str | None = None) -> dict:
     """Aggregate accumulators -> the paper's metrics (one scenario).
@@ -781,6 +954,18 @@ def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
     ring_frac = float(a["ring_pkts"] + a["fc_ring_pkts"]) / inj
     hops = 4.0 + 2.0 * frac_inter + ring_frac
     mean_latency_us = STACK_US + hops * WIRE_HOP_US + mean_wait
+
+    # ---- delay distribution + attribution (see module docstring) -------
+    hist = np.asarray(a["delay_hist"], np.float64)
+    wt = max(float(a["delay_wt"]), 1e-9)
+    occ = {}
+    for tier, n_ports in (("rsw", site.n_racks * site.rsw_uplinks),
+                          ("csw", site.n_csw * site.csw_uplinks)):
+        n = T * n_ports
+        m1 = float(a[f"{tier}_occ_m1"]) / n
+        occ[f"{tier}_occ_mean_pkts"] = m1
+        occ[f"{tier}_occ_var_pkts"] = max(
+            float(a[f"{tier}_occ_m2"]) / n - m1 * m1, 0.0)
 
     # ---- energy ---------------------------------------------------------
     pw = s.transceiver_power_w()
@@ -826,6 +1011,19 @@ def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
         "half_off_frac": float(a["half_off_ticks"]) / T,
         "on_frac_hist": (a["on_frac_hist"] / T).tolist(),
         "offered_load_pkts_per_tick": inj / T,
+        # in-scan delay distribution (normalized; bins in
+        # DELAY_BIN_EDGES_US) + percentiles + the attribution split
+        "delay_hist": (hist / wt).tolist(),
+        "delay_p50_us": _hist_quantile(hist, 0.50),
+        "delay_p95_us": _hist_quantile(hist, 0.95),
+        "delay_p99_us": _hist_quantile(hist, 0.99),
+        "delay_mean_sampled_us": float(a["delay_sum"]) / wt,
+        "delay_queue_us": float(a["delay_queue_sum"]) / wt,
+        "delay_wake_stall_us": float(a["delay_stall_sum"]) / wt,
+        "delay_ring_us": ring_frac * WIRE_HOP_US,
+        "delay_frac_inter": float(a["delay_wt_inter"]) / wt,
+        "wake_stall_frac": float(a["wake_stall_pkts"]) / wt,
+        **occ,
     }
 
 

@@ -10,7 +10,12 @@ tile of switches, one tick of
       [intra, inter] split), enqueued proportionally,
   (3) up-to-serve_rate pkt/port service over active ports, split
       proportionally across the K components,
-  (4) high/low watermark trigger generation (the backlog monitor).
+  (4) high/low watermark trigger generation (the backlog monitor),
+  (5) backlog-age / occupancy-moment taps: the pre-enqueue backlog the
+      arriving packet queues behind (in ticks-to-serve) plus the first
+      and second post-serve occupancy moments over the output ports —
+      the oracle-checked feed of the simulator's in-scan packet-delay
+      histograms.
 
 All switches in a tile advance in one VPU-wide vector step; queues are
 laid out (S, L*K) so the tile stays 2-D (lane-friendly) and is reshaped
@@ -37,7 +42,8 @@ BIG = 1e30
 
 def _kernel(q_ref, stage_ref, drain_ref, valid_ref, arr_ref, cap_ref,
             hi_ref, lo_ref, qo_ref, srv_ref, hi_o_ref, lo_o_ref,
-            drop_ref, *, n_links: int, n_comp: int, serve_rate: float):
+            drop_ref, wait_ref, m1_ref, m2_ref, *, n_links: int,
+            n_comp: int, serve_rate: float):
     L, K = n_links, n_comp
     bs = q_ref.shape[0]
     q = q_ref[...].reshape(bs, L, K)
@@ -59,6 +65,9 @@ def _kernel(q_ref, stage_ref, drain_ref, valid_ref, arr_ref, cap_ref,
     pick = masked == mn
     pick &= jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
 
+    # (5a) backlog-age of the pick: what an arrival queues behind
+    wait_ref[...] = jnp.where(valid, mn, 0.0) / serve_rate
+
     # (2) enqueue with capacity clamp, proportional over components
     add_tot = jnp.sum(arr, axis=1, keepdims=True)   # (bs, 1)
     room = jnp.maximum(cap - mn, 0.0)
@@ -79,6 +88,13 @@ def _kernel(q_ref, stage_ref, drain_ref, valid_ref, arr_ref, cap_ref,
     # (4) watermark triggers on post-serve backlogs; invalid switches
     # never trigger (lo would otherwise fire vacuously on act==empty)
     qpost = qtot - serve_tot
+
+    # (5b) post-serve occupancy moments over the output ports
+    m1_ref[...] = jnp.where(valid, jnp.sum(qpost, axis=1, keepdims=True),
+                            0.0)
+    m2_ref[...] = jnp.where(valid,
+                            jnp.sum(qpost * qpost, axis=1, keepdims=True),
+                            0.0)
     hi_o_ref[...] = jnp.any((qpost > hi_ref[...] * cap) & act, axis=1,
                             keepdims=True).astype(jnp.int32)
     lo_o_ref[...] = (jnp.all(jnp.where(act, qpost < lo_ref[...] * cap,
@@ -91,8 +107,9 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
                 interpret=True):
     """queues (S, L, K) or (S, L); stage (S,) int32; arrivals (S, K) or
     (S,); draining (S,) bool; valid (S,) bool padding mask (invalid
-    switches are inert). Same contract as ref.switch_step_ref:
-    returns (new_queues, served, hi_trig, lo_trig, dropped)."""
+    switches are inert). Same contract as ref.switch_step_ref: returns
+    (new_queues, served, hi_trig, lo_trig, dropped, enq_wait, occ_m1,
+    occ_m2)."""
     squeeze = queues.ndim == 2
     if squeeze:
         queues = queues[..., None]
@@ -126,17 +143,21 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
     spec_lk = pl.BlockSpec((bs, L * K), lambda i: (i, 0))
     spec_1 = pl.BlockSpec((bs, 1), lambda i: (i, 0))
     spec_k = pl.BlockSpec((bs, K), lambda i: (i, 0))
-    qo, srv, hi_t, lo_t, drop = pl.pallas_call(
+    qo, srv, hi_t, lo_t, drop, wait, m1, m2 = pl.pallas_call(
         kern,
         grid=(Sp // bs,),
         in_specs=[spec_lk, spec_1, spec_1, spec_1, spec_k, spec_1, spec_1,
                   spec_1],
-        out_specs=[spec_lk, spec_lk, spec_1, spec_1, spec_1],
+        out_specs=[spec_lk, spec_lk, spec_1, spec_1, spec_1, spec_1,
+                   spec_1, spec_1],
         out_shape=[
             jax.ShapeDtypeStruct((Sp, L * K), f32),
             jax.ShapeDtypeStruct((Sp, L * K), f32),
             jax.ShapeDtypeStruct((Sp, 1), jnp.int32),
             jax.ShapeDtypeStruct((Sp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Sp, 1), f32),
+            jax.ShapeDtypeStruct((Sp, 1), f32),
+            jax.ShapeDtypeStruct((Sp, 1), f32),
             jax.ShapeDtypeStruct((Sp, 1), f32),
         ],
         interpret=interpret,
@@ -145,7 +166,8 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
     srv = srv[:S].reshape(S, L, K)
     if squeeze:
         qo, srv = qo[..., 0], srv[..., 0]
-    return qo, srv, hi_t[:S, 0], lo_t[:S, 0], drop[:S, 0]
+    return (qo, srv, hi_t[:S, 0], lo_t[:S, 0], drop[:S, 0], wait[:S, 0],
+            m1[:S, 0], m2[:S, 0])
 
 
 def _round_up(n: int, m: int) -> int:

@@ -52,7 +52,11 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
     ref.switch_step_ref for the argument/return contract; queues may be
     (S, L, K) component-split or plain (S, L). ``valid`` is the (S,)
     padding mask of heterogeneous-site batches (invalid switches are
-    inert)."""
+    inert). Besides the datapath outputs, both paths emit the per-switch
+    backlog-age (``enq_wait``: what an arrival queues behind, in ticks)
+    and post-serve occupancy moments (``occ_m1``/``occ_m2``) that feed
+    the simulator's in-scan delay histograms, so the distribution
+    subsystem runs off the same oracle-checked kernel."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:

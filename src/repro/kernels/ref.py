@@ -70,10 +70,23 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     so the port total never exceeds ``cap`` (the clipped excess is
     dropped), (3) serve up to ``serve_rate`` pkts/tick per active port,
     split proportionally across the K components, (4) raise hi/lo
-    watermark triggers on the post-serve backlogs.
+    watermark triggers on the post-serve backlogs, (5) emit the
+    backlog-age / occupancy moments that feed the simulator's in-scan
+    delay histograms.
 
-    Returns (new_queues, served, hi_trig, lo_trig, dropped) where
-    served has the queues' shape, hi/lo are int32 (S,), dropped is (S,).
+    Returns (new_queues, served, hi_trig, lo_trig, dropped, enq_wait,
+    occ_m1, occ_m2) where served has the queues' shape, hi/lo are int32
+    (S,), dropped is (S,), and the moment outputs are (S,) float:
+
+    enq_wait: the queue wait a packet arriving THIS tick inherits — the
+              pre-enqueue backlog of the min-backlog pick divided by
+              ``serve_rate`` (ticks until head-of-line). 0 for invalid
+              switches.
+    occ_m1:   sum over the switch's output ports of the post-serve
+              per-port backlog (first occupancy moment).
+    occ_m2:   sum of the squared post-serve per-port backlogs (second
+              moment; m2/n - (m1/n)^2 is the backlog variance over
+              port-ticks). Both 0 for invalid switches.
     """
     squeeze = queues.ndim == 2
     if squeeze:
@@ -95,6 +108,9 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     pick = masked == mn
     pick &= jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
 
+    # (5a) backlog-age of the pick: what an arrival queues behind
+    enq_wait = jnp.where(valid, mn[:, 0], 0.0) / serve_rate
+
     # (2) enqueue with capacity clamp (proportional over components)
     add_tot = jnp.sum(arrivals, axis=1)                 # (S,)
     room = jnp.maximum(cap - mn[:, 0], 0.0)
@@ -112,12 +128,17 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     served = q * frac[..., None]
     q = q - served
 
+    # (5b) post-serve occupancy moments over the switch's output ports
+    qpost = qtot - serve_tot
+    occ_m1 = jnp.where(valid, jnp.sum(qpost, axis=1), 0.0)
+    occ_m2 = jnp.where(valid, jnp.sum(qpost * qpost, axis=1), 0.0)
+
     # (4) watermark triggers on post-serve backlogs (shared definition);
     # invalid switches never trigger
-    hi_t, lo_t = gating.watermark_triggers(qtot - serve_tot, stage,
+    hi_t, lo_t = gating.watermark_triggers(qpost, stage,
                                            cap=cap, hi=hi, lo=lo)
     hi_t, lo_t = hi_t & valid, lo_t & valid
     if squeeze:
         q, served = q[..., 0], served[..., 0]
     return (q, served, hi_t.astype(jnp.int32), lo_t.astype(jnp.int32),
-            dropped)
+            dropped, enq_wait, occ_m1, occ_m2)

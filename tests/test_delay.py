@@ -1,0 +1,173 @@
+"""In-scan packet-delay distributions: histogram integrity, wake-stall
+attribution, chunk-fold invariance, on_frac_hist boundary semantics and
+the hull-padding power-accounting regression."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import constants as C
+from repro.core import simulator as S
+from repro.core.topology import FBSite
+from repro.core.traffic import TRAFFIC_SPECS
+
+TICKS = 2_000
+
+
+@pytest.fixture(scope="module")
+def delay_results():
+    """{LC/DC, always-on} on a loaded fb_hadoop, one sweep; also captures
+    the trace count around the run (one-compile contract with the new
+    histogram accumulators in the carry)."""
+    batch = S.sweep_grid(traces=("fb_hadoop",), gating=(True, False),
+                         rate_scales=(1.5,))
+    n0 = S.TRACE_COUNT
+    res = S.run_sweep(batch, TICKS, chunk_ticks=600)
+    return res, S.TRACE_COUNT - n0
+
+
+def test_delay_sweep_compiles_once(delay_results):
+    _, traces = delay_results
+    assert traces == 1
+
+
+def test_histogram_normalized_and_ordered(delay_results):
+    res, _ = delay_results
+    for r in res:
+        hist = np.asarray(r["delay_hist"])
+        assert hist.shape == (C.DELAY_HIST_BINS,)
+        assert abs(hist.sum() - 1.0) < 1e-6
+        assert np.all(hist >= 0.0)
+        # percentiles ordered and above the stack+wire floor
+        assert 5.75 <= r["delay_p50_us"] <= r["delay_p95_us"] \
+            <= r["delay_p99_us"]
+        # the histogram mean lands inside the histogram's support
+        assert S.DELAY_BIN_EDGES_US[0] <= r["delay_mean_sampled_us"]
+
+
+def test_bin_edges_match_binning():
+    """A sample placed exactly at a bin's lower edge lands in that bin
+    (half-open [lo, hi) bins, log-spaced above DELAY_HIST_MIN_US)."""
+    h0 = jnp.zeros((C.DELAY_HIST_BINS,))
+    for i in (1, 2, 10, C.DELAY_HIST_BINS - 1):
+        edge = S.DELAY_BIN_EDGES_US[i]
+        h = np.asarray(S._delay_hist_add(h0, jnp.array([edge]),
+                                         jnp.array([1.0])))
+        assert h[i] == 1.0, (i, edge, np.nonzero(h))
+    # below MIN -> bin 0; beyond the last edge -> clipped into last bin
+    h = np.asarray(S._delay_hist_add(h0, jnp.array([0.5]),
+                                     jnp.array([1.0])))
+    assert h[0] == 1.0
+    h = np.asarray(S._delay_hist_add(
+        h0, jnp.array([S.DELAY_BIN_EDGES_US[-1] * 100]),
+        jnp.array([1.0])))
+    assert h[-1] == 1.0
+
+
+def test_attribution_identity(delay_results):
+    """The sampled mean decomposes exactly into fixed path cost +
+    queueing + wake stalls (the split _finalize reports)."""
+    res, _ = delay_results
+    for r in res:
+        base = S.STACK_US + 4.0 * S.WIRE_HOP_US \
+            + 2.0 * S.WIRE_HOP_US * r["delay_frac_inter"]
+        total = base + r["delay_queue_us"] + r["delay_wake_stall_us"]
+        assert abs(total - r["delay_mean_sampled_us"]) \
+            <= 1e-5 * max(total, 1.0), r["label"]
+
+
+def test_wake_stall_zero_without_gating(delay_results):
+    """With gating disabled no stage-up ever fires: the wake-stall
+    attribution is EXACTLY zero (the acceptance bar, not approximately)."""
+    res, _ = delay_results
+    base = next(r for r in res if not r["gating"])
+    assert base["delay_wake_stall_us"] == 0.0
+    assert base["wake_stall_frac"] == 0.0
+
+
+def test_wake_stall_positive_under_gating(delay_results):
+    """A loaded LC/DC scenario pays real stage-up stalls, and they are
+    visible in the attribution split."""
+    res, _ = delay_results
+    lc = next(r for r in res if r["gating"])
+    assert lc["delay_wake_stall_us"] > 0.0
+    assert 0.0 < lc["wake_stall_frac"] < 1.0
+    # the penalty the stalls cause: gated delay tail at or above baseline
+    basef = next(r for r in res if not r["gating"])
+    assert lc["delay_p50_us"] >= basef["delay_p50_us"] - 1e-6
+
+
+def test_hist_chunk_fold_invariant():
+    """The histogram is an ordinary accumulator: folding it into float64
+    at chunk boundaries (with a masked remainder tail) must not change a
+    single bin."""
+    batch = S.sweep_grid(traces=("university",), gating=(True,))
+    whole = S.run_sweep(batch, 1_000, chunk_ticks=10_000)[0]
+    remainder = S.run_sweep(batch, 1_000, chunk_ticks=300)[0]
+    np.testing.assert_allclose(np.asarray(whole["delay_hist"]),
+                               np.asarray(remainder["delay_hist"]),
+                               atol=1e-9)
+    for k in ("delay_p50_us", "delay_p99_us", "delay_queue_us",
+              "delay_wake_stall_us", "wake_stall_frac"):
+        assert abs(whole[k] - remainder[k]) <= 1e-6 * max(
+            abs(whole[k]), 1.0), k
+
+
+def test_occupancy_moments_sane(delay_results):
+    res, _ = delay_results
+    for r in res:
+        for tier in ("rsw", "csw"):
+            mean = r[f"{tier}_occ_mean_pkts"]
+            var = r[f"{tier}_occ_var_pkts"]
+            assert mean >= 0.0 and var >= 0.0
+            # per-port backlog is capped at queue_cap
+            assert mean <= C.QUEUE_CAP_PKTS
+
+
+# ---- on_frac_hist boundary semantics (satellite bugfix) ----------------
+
+def test_on_frac_bucket_boundaries():
+    """Half-open-left quartiles (0,25],(25,50],(50,75],(75,100]: exact
+    boundaries belong to the LOWER bucket; 0 clips into the first bucket
+    and 100% into the last (no phantom 5th bucket)."""
+    frac = jnp.array([0.0, 0.1, 0.25, 0.25 + 1e-6, 0.5, 0.5 + 1e-6,
+                      0.75, 0.75 + 1e-6, 1.0])
+    expect = np.array([0, 0, 0, 1, 1, 2, 2, 3, 3])
+    np.testing.assert_array_equal(
+        np.asarray(S.on_frac_bucket(frac)), expect)
+
+
+def test_all_floor_state_is_first_bucket():
+    """The common all-idle state (every switch at stage 1 of 4) is
+    exactly 25% on and must be counted in the 0-25 bucket — the bug this
+    PR fixes put it in 25-50."""
+    assert int(S.on_frac_bucket(jnp.float32(144.0 / 576.0))) == 0
+
+
+# ---- hull-padding power-accounting regression (satellite audit) --------
+
+def test_padded_column_site_identical_activation():
+    """A site padded along the PLANE/UPLINK columns (csw_per_cluster and
+    n_fc smaller than the hull's) must report exactly the activation
+    metrics of its unpadded twin: powered columns beyond the real link
+    count must never light up, and frac_on normalizes by the real site."""
+    small = FBSite(n_clusters=2, racks_per_cluster=4, servers_per_rack=8,
+                   csw_per_cluster=2, n_fc=2, csw_ring_links=4,
+                   fc_ring_links=8)
+    wide = FBSite(n_clusters=2, racks_per_cluster=4, servers_per_rack=8,
+                  csw_per_cluster=4, n_fc=4, csw_ring_links=4,
+                  fc_ring_links=8)
+    spec = TRAFFIC_SPECS["fb_hadoop"]
+    run = (S.SimParams(spec=spec, site=small, rate_scale=1.5), 0)
+    alone = S.run_sweep(S.make_batch([run]), 1_500)[0]
+    padded = S.run_sweep(S.make_multi_site_batch(
+        [run, (S.SimParams(spec=spec, site=wide), 1)]), 1_500)[0]
+    # a real column-masking bug (padded columns counted as powered, or
+    # frac_on normalized by hull dims) shifts EVERY tick's frac_on, i.e.
+    # O(1) divergence; the tolerance only forgives a couple of ticks
+    # flipped by backend-dependent f32 reduction order over the padded
+    # (differently-shaped) arrays — 2e-3 of 1500 ticks = 3 ticks
+    np.testing.assert_allclose(np.asarray(alone["on_frac_hist"]),
+                               np.asarray(padded["on_frac_hist"]),
+                               atol=2e-3)
+    for k in ("half_off_frac", "rsw_link_on_frac", "csw_link_on_frac"):
+        assert abs(alone[k] - padded[k]) <= 2e-3, (k, alone[k], padded[k])

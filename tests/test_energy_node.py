@@ -1,17 +1,28 @@
 """Energy models (Fig 1 / Fig 11) and the node-level hiding condition."""
+import pytest
 from hypothesis import given, strategies as st
 
 from repro.core import constants as C
 from repro.core.energy import (dc_savings, final_network_fractions,
                                power_breakdown_series)
-from repro.core.node_model import (STACK_STAGES, default_timing,
-                                   hiding_condition,
+from repro.core.node_model import (NodeTiming, STACK_STAGES,
+                                   default_timing, hiding_condition,
                                    max_hideable_laser_on_us)
 from repro.core.topology import all_designs, fb_site_design, FBSite
 
 
 def test_stack_budget_is_3750ns():
     assert sum(ns for _, ns in STACK_STAGES) == 3750
+
+
+def test_stack_stages_in_sync_with_constants():
+    """node_model.STACK_STAGES and constants.TCP_STACK_NS describe the
+    same measured pipeline: stage-by-stage identical, and the 3.75 us
+    total is the budget the measured SENDMSG_TO_TX_US mean (3.2 us)
+    stays within — the slack is what hides the laser."""
+    assert tuple(ns for _, ns in STACK_STAGES) == C.TCP_STACK_NS
+    assert sum(C.TCP_STACK_NS) == 3750
+    assert C.SENDMSG_TO_TX_US * 1000 <= sum(C.TCP_STACK_NS)
 
 
 def test_laser_turn_on_hidden():
@@ -28,6 +39,25 @@ def test_max_hideable_exceeds_sfp_requirement():
 def test_property_hiding_condition(laser_us):
     hidden = hiding_condition(laser_us)
     assert hidden == (laser_us + C.CDR_LOCK_US <= C.SENDMSG_TO_TX_US)
+
+
+@given(st.floats(0.01, 20.0))
+def test_property_timing_agrees_with_hiding_condition(laser_us):
+    """NodeTiming.added_latency_ns and hiding_condition must agree for
+    ALL laser turn-on times, including the non-hidden regime: hidden iff
+    zero added latency, and a non-hidden laser adds exactly the excess
+    over the sendmsg->transmit window."""
+    t = NodeTiming(stack_ns=int(C.SENDMSG_TO_TX_US * 1000),
+                   laser_on_ns=int(laser_us * 1000),
+                   cdr_ns=C.CDR_LOCK_US * 1000)
+    assert t.hidden == (t.added_latency_ns == 0.0)
+    # the int() ns truncation can only make the laser LOOK faster, so
+    # the timing model may hide a laser the (exact) condition rejects
+    # within one truncated ns — compare on the timing's own terms
+    assert t.hidden == hiding_condition(t.laser_on_ns / 1000.0)
+    excess = (t.laser_on_ns + t.cdr_ns) - t.stack_ns
+    assert t.added_latency_ns == pytest.approx(max(0.0, excess))
+    assert t.added_latency_ns >= 0.0
 
 
 def test_fig1_network_fraction_grows():
@@ -65,6 +95,16 @@ def test_fig11_dc_savings():
     assert 0.06 <= avg.savings_links_only <= 0.20
     assert avg.savings_with_phy_nic > avg.savings_links_only
     assert 0.15 <= avg.savings_with_phy_nic <= 0.35
+
+
+def test_fig11_average_row_carries_real_mean_fraction():
+    """The "average" row's transceiver_frac must be the mean over the
+    designs, not a 0.0 placeholder that poisons downstream averages."""
+    res = dc_savings(transceiver_on_frac=0.4, util=0.30)
+    designs = [r for k, r in res.items() if k != "average"]
+    expect = sum(r.transceiver_frac for r in designs) / len(designs)
+    assert res["average"].transceiver_frac == pytest.approx(expect)
+    assert res["average"].transceiver_frac > 0.05
 
 
 def test_fb_site_counts():

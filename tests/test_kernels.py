@@ -94,7 +94,7 @@ def test_switch_step_vs_ref(S, L, block):
     arr = jax.random.uniform(ks[2], (S,)) * 3
     a = switch_step(q, stage, arr, block_s=block)
     b = ref.switch_step_ref(q, stage, arr)
-    assert len(a) == len(b) == 5
+    assert len(a) == len(b) == 8
     for x, y in zip(a, b):
         np.testing.assert_allclose(np.asarray(x, np.float32),
                                    np.asarray(y, np.float32), atol=1e-6)
@@ -136,13 +136,17 @@ def test_switch_step_valid_mask_vs_ref(S, L, K, block):
     for x, y in zip(a, b):
         np.testing.assert_allclose(np.asarray(x, np.float32),
                                    np.asarray(y, np.float32), atol=1e-6)
-    nq, served, hi_t, lo_t, drop = b
+    nq, served, hi_t, lo_t, drop, wait, occ_m1, occ_m2 = b
     inv = ~np.asarray(valid)
     np.testing.assert_allclose(np.asarray(nq)[inv], np.asarray(q)[inv])
     assert np.all(np.asarray(served)[inv] == 0)
     assert np.all(np.asarray(hi_t)[inv] == 0)
     assert np.all(np.asarray(lo_t)[inv] == 0)
     assert np.all(np.asarray(drop)[inv] == 0)
+    # the delay-histogram taps are inert on padded switches too
+    assert np.all(np.asarray(wait)[inv] == 0)
+    assert np.all(np.asarray(occ_m1)[inv] == 0)
+    assert np.all(np.asarray(occ_m2)[inv] == 0)
 
 
 def test_switch_step_per_switch_cap_vs_ref():
@@ -167,12 +171,39 @@ def test_switch_step_drain_blocks_enqueue_but_serves():
     stage = jnp.array([2], jnp.int32)
     arr = jnp.array([[3.0]])
     drain = jnp.array([True])
-    nq, served, _, _, drop = ref.switch_step_ref(q, stage, arr, drain,
-                                                 cap=20.0)
+    nq, served, _, _, drop, wait, _, _ = ref.switch_step_ref(
+        q, stage, arr, drain, cap=20.0)
     # arrival lands on port 0 (only usable), port 1 still drains 1 pkt
     np.testing.assert_allclose(np.asarray(nq[0, :, 0]), [7.0, 8.0])
     np.testing.assert_allclose(np.asarray(served[0, :, 0]), [1.0, 1.0])
     assert float(drop[0]) == 0.0
+    # the arrival queues behind port 0's 5 existing pkts (not the
+    # draining port's 9): backlog-age 5 ticks at serve_rate 1
+    assert float(wait[0]) == 5.0
+
+
+def test_switch_step_moment_taps_vs_direct():
+    """The backlog-age / occupancy-moment outputs equal what a direct
+    recomputation from the returned queues gives: enq_wait is the
+    min-usable-port backlog over serve_rate, occ_m1/m2 are the first two
+    moments of the post-serve per-port backlogs."""
+    from repro.core import gating
+    ks = jax.random.split(jax.random.PRNGKey(23), 3)
+    S, L, K, rate = 64, 4, 2, 4.0
+    q = jax.random.uniform(ks[0], (S, L, K)) * 15
+    stage = jax.random.randint(ks[1], (S,), 1, L + 1)
+    arr = jax.random.uniform(ks[2], (S, K)) * 2
+    nq, served, _, _, _, wait, m1, m2 = ref.switch_step_ref(
+        q, stage, arr, serve_rate=rate)
+    usable = np.asarray(gating.usable_links(
+        stage, jnp.zeros((S,), bool), L))
+    qtot = np.asarray(jnp.sum(q, axis=2))
+    mn = np.min(np.where(usable, qtot, np.inf), axis=1)
+    np.testing.assert_allclose(np.asarray(wait), mn / rate, atol=1e-6)
+    qpost = np.asarray(jnp.sum(nq, axis=2))
+    np.testing.assert_allclose(np.asarray(m1), qpost.sum(1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2), (qpost ** 2).sum(1),
+                               atol=1e-4)
 
 
 def test_wkv_kernel_plugs_into_model():
