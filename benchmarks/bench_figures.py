@@ -160,16 +160,29 @@ def bench_ici_gating(report):
 
 
 def bench_sweep_throughput(report):
-    """Batched sweep engine canary: scen-ticks/s on a small grid (the
-    full serial-vs-batched comparison lives in benchmarks/bench_sweep.py)."""
-    from repro.core.simulator import sweep_grid, run_sweep
+    """Batched sweep engine canary: scen-ticks/s on a small
+    heterogeneous-site grid through the hull-bucketing planner (the
+    full serial-vs-batched and planner-vs-single-hull comparisons live
+    in benchmarks/bench_sweep.py)."""
+    from repro.core.simulator import (SimParams, grid_runs,
+                                      run_sweep_planned)
+    from repro.core.topology import FBSite
+    small = FBSite(n_clusters=2, racks_per_cluster=8, servers_per_rack=8,
+                   csw_per_cluster=2, n_fc=2, csw_ring_links=4,
+                   fc_ring_links=8)
     ticks, t0 = 1_000, time.time()
-    batch = sweep_grid(traces=("fb_hadoop", "microsoft"))   # 4 scenarios
-    run_sweep(batch, ticks)
+    runs = [r for site in (FBSite(), small)
+            for r in grid_runs(traces=("fb_hadoop", "microsoft"),
+                               site=site)]           # 8 scenarios, 2 sites
+    _, plan = run_sweep_planned(runs, ticks, max_compiles=2,
+                                return_plan=True)
     dt = time.time() - t0
     report("sweep_throughput", dt,
-           f"{len(batch)} scenarios x {ticks} ticks, one compile; "
-           f"{len(batch) * ticks / dt:.0f} scen-ticks/s incl compile")
+           f"{len(runs)} scenarios x {ticks} ticks, "
+           f"{plan['n_buckets']} hull buckets "
+           f"(padded-compute savings "
+           f"{plan['savings_vs_single_hull_frac']:.1%} vs single hull); "
+           f"{len(runs) * ticks / dt:.0f} scen-ticks/s incl compile")
 
 
 ALL = [bench_fig1_power_breakdown, bench_fig7_traffic_cdfs,

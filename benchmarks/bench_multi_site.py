@@ -1,8 +1,9 @@
 """Fig-1-style design comparison on the dynamic simulator: several
 FBSite fabric shapes (same server population, different cluster / plane
 / core structure), each with LC/DC gating and the always-on baseline,
-run as ONE multi-site batched sweep — a single vmapped compile over the
-padded hull, remainder tail included.
+run through the hull-bucketing sweep planner — a handful of vmapped
+compiles (``--max-compiles``, one per hull bucket, remainder tails
+included) instead of one compile on the worst-case padded hull.
 
 This is the dynamic companion to topology.all_designs() (the paper's
 static Fig 1 component-count power table, also printed for context):
@@ -13,7 +14,8 @@ actually achieves on each fabric shape under the same traffic.
   PYTHONPATH=src python -m benchmarks.bench_multi_site --smoke   # canary
 
 --check additionally re-runs every scenario single-site and asserts the
-PARITY_KEYS agree within --tol (the padding-is-inert contract).
+PARITY_KEYS agree within --tol (the padding-is-inert contract, now per
+bucket). --max-compiles 1 recovers the old single-hull path exactly.
 """
 from __future__ import annotations
 
@@ -52,6 +54,8 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="verify parity against single-site run_sweep")
     ap.add_argument("--tol", type=float, default=1e-3)
+    ap.add_argument("--max-compiles", type=int, default=2,
+                    help="planner hull-bucket budget (1 = old single-hull)")
     args = ap.parse_args()
 
     # deliberately NOT a multiple of the chunk: the remainder tail must
@@ -62,21 +66,29 @@ def main() -> None:
     spec = TRAFFIC_SPECS[args.trace]
     runs = [(S.SimParams(spec=spec, site=site, gating_enabled=g), 0)
             for site in SITES.values() for g in (True, False)]
-    batch = S.make_multi_site_batch(runs)
-    hull = batch.hull
     print(f"{len(SITES)} sites x {{lcdc, base}} = {len(runs)} scenarios, "
           f"trace={args.trace}, {ticks} ticks (chunk {chunk}), "
-          f"hull {S._site_tag(hull)}")
+          f"max_compiles={args.max_compiles}")
 
     n0 = S.TRACE_COUNT
     t0 = time.time()
-    res = S.run_sweep(batch, ticks, chunk_ticks=chunk)
+    res, plan = S.run_sweep_planned(runs, ticks, chunk_ticks=chunk,
+                                    max_compiles=args.max_compiles,
+                                    return_plan=True)
     wall = time.time() - t0
     traces = S.TRACE_COUNT - n0
-    print(f"one multi-site sweep: {wall:.2f} s, step traces: {traces} "
-          f"(contract: 1, remainder tail included)")
-    if traces != 1:
-        raise SystemExit(f"one-compile contract broken: {traces} traces")
+    print(f"planned multi-site sweep: {wall:.2f} s, step traces: {traces} "
+          f"(contract: one per hull bucket = {plan['n_buckets']}, "
+          f"remainder tails included)")
+    if traces != plan["n_buckets"]:
+        raise SystemExit("one-compile-per-bucket contract broken: "
+                         f"{traces} traces for {plan['n_buckets']} buckets")
+
+    print(f"\n--- hull-bucket plan (padded-compute savings "
+          f"{plan['savings_vs_single_hull_frac']:.1%} vs single hull) ---")
+    for b in plan["buckets"]:
+        print(f"hull {b['hull']:22s} x{b['n_scenarios']} scenarios  "
+              f"waste {b['waste_frac']:6.1%}  indices {b['indices']}")
 
     print("\n--- static Fig 1 context (peak component power, kW) ---")
     for d in all_designs():
@@ -108,14 +120,9 @@ def main() -> None:
 
     worst_key, worst = None, 0.0
     if args.check:
-        for run, mixed in zip(runs, res):
-            single = S.run_sweep(S.make_batch([run]), ticks,
-                                 chunk_ticks=chunk)[0]
-            for k in S.PARITY_KEYS:
-                d = abs(single[k] - mixed[k]) / max(
-                    abs(single[k]), abs(mixed[k]), 1e-9)
-                if d > worst:
-                    worst_key, worst = f"{mixed['label']}:{k}", d
+        singles = [S.run_sweep(S.make_batch([run]), ticks,
+                               chunk_ticks=chunk)[0] for run in runs]
+        worst, worst_key = S.worst_parity(singles, res)
         ok = worst <= args.tol
         print(f"\nmax multi-vs-single-site rel diff: {worst:.2e} "
               f"[{worst_key}] {'OK' if ok else f'> tol {args.tol:g}'}")
@@ -128,6 +135,7 @@ def main() -> None:
         "chunk_ticks": chunk, "scenarios": len(runs),
         "step_traces": traces, "wall_s": round(wall, 3),
         "checked": bool(args.check), "max_rel_diff": worst,
+        "plan": plan,
         "sites": rows,
     }, indent=1))
     print(f"written: {OUT}")

@@ -1,15 +1,37 @@
-"""Serial-vs-batched scenario-sweep benchmark (the sweep engine's
-reason to exist): runs the full Fig 9/10 evaluation grid — every
-traffic trace x {LC/DC, always-on} — once through serial ``run_sim``
-calls (which re-trace and re-jit per scenario, the pre-sweep engine's
-behaviour) and once through one batched ``run_sweep``, and reports
-scenarios/sec, scenario-ticks/sec, the wall-clock speedup, and the
-worst per-scenario metric divergence between the two paths.
+"""Sweep-engine benchmark + the CI perf/parity regression gate.
+
+Two sections, both written to results/ and both gated by the committed
+baseline (benchmarks/baselines.json) under ``--check-baseline``:
+
+1. serial vs batched — the full Fig 9/10 evaluation grid (every traffic
+   trace x {LC/DC, always-on}) once through serial ``run_sim`` calls
+   (re-trace + re-jit per scenario, the pre-sweep engine's behaviour)
+   and once through one batched ``run_sweep``; reports scenarios/sec,
+   scenario-ticks/sec, the wall-clock speedup, and the worst
+   per-scenario metric divergence between the two paths.
+
+2. hull-bucketing planner — the acceptance mix: a bimodal 6-site batch
+   (3 small + 3 large fabrics) through ``run_sweep_planned(
+   max_compiles=2)`` vs the single-hull ``make_multi_site_batch`` path;
+   reports the modeled padded-compute savings (>= 30% required), the
+   trace counts (one compile per hull bucket), and the worst metric
+   divergence between planned and single-hull results. The bucketing
+   report is also written to results/bench_planner_report.json (a CI
+   build artifact).
 
   PYTHONPATH=src python -m benchmarks.bench_sweep            # full grid
   PYTHONPATH=src python -m benchmarks.bench_sweep --smoke    # <1 min canary
+  PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --check-baseline
+  PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --update-baseline
 
---smoke runs a 2-trace grid at 500 ticks: a fast perf canary for CI.
+--check-baseline compares the run against benchmarks/baselines.json and
+exits nonzero on any violated band: parity/savings/bucket-count gates
+are machine-independent hard bounds, timing gates are generous ratios
+to the blessed values (CI runners are noisy — the bands catch
+order-of-magnitude regressions like a lost compile cache, not 10%
+jitter). To bless a new baseline after an intentional perf change, run
+with --update-baseline and commit the rewritten baselines.json (the
+band definitions are preserved; only the blessed values move).
 """
 from __future__ import annotations
 
@@ -18,26 +40,50 @@ import json
 import time
 from pathlib import Path
 
-from repro.core.simulator import (PARITY_KEYS, grid_runs, make_batch,
-                                  run_sim, run_sweep)
+from repro.core import simulator as S
+from repro.core.simulator import (SimParams, grid_runs, make_batch,
+                                  make_multi_site_batch, run_sim,
+                                  run_sweep, run_sweep_planned,
+                                  worst_parity)
+from repro.core.topology import FBSite
 from repro.core.traffic import TRAFFIC_SPECS
 
-OUT = Path(__file__).resolve().parents[1] / "results" / "bench_sweep.json"
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+OUT = RESULTS / "bench_sweep.json"
+PLAN_OUT = RESULTS / "bench_planner_report.json"
+BASELINE = Path(__file__).resolve().with_name("baselines.json")
+
+# the acceptance-criteria mix: 3 small + 3 large fabrics whose shared
+# hull would waste most of the compute on padding the small ones
+BIMODAL_SITES = (
+    FBSite(n_clusters=2, racks_per_cluster=4, servers_per_rack=8,
+           csw_per_cluster=2, n_fc=2, csw_ring_links=4, fc_ring_links=8),
+    FBSite(n_clusters=2, racks_per_cluster=5, servers_per_rack=8,
+           csw_per_cluster=2, n_fc=2, csw_ring_links=4, fc_ring_links=8),
+    FBSite(n_clusters=2, racks_per_cluster=6, servers_per_rack=8,
+           csw_per_cluster=2, n_fc=2, csw_ring_links=4, fc_ring_links=8),
+    FBSite(),                                  # the Fig 2 4x32 default
+    FBSite(racks_per_cluster=28),
+    FBSite(racks_per_cluster=24),
+)
+
+#: default tolerance bands, used when blessing a baseline from scratch.
+#: *_abs bands are machine-independent hard bounds; *_frac_of_baseline
+#: bands are generous ratios to the blessed value (CI noise tolerant).
+DEFAULT_BANDS = {
+    "speedup": {"min_frac_of_baseline": 0.25},
+    "scen_ticks_per_s_batched": {"min_frac_of_baseline": 0.20},
+    "t_batched_s": {"max_frac_of_baseline": 5.0},
+    "max_rel_diff": {"max_abs": 1e-3},
+    "planner_savings_frac": {"min_abs": 0.30,
+                             "min_frac_of_baseline": 0.90},
+    "planner_max_rel_diff": {"max_abs": 1e-3},
+    "planner_n_buckets": {"equal": True},
+    "planner_traces": {"equal": True},
+}
 
 
-def _rel_diff(a: float, b: float) -> float:
-    return abs(a - b) / max(abs(a), abs(b), 1e-9)
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--ticks", type=int, default=None)
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny grid, <1 min, for use as a perf canary")
-    ap.add_argument("--tol", type=float, default=1e-3,
-                    help="max allowed serial-vs-batched relative diff")
-    args = ap.parse_args()
-
+def bench_serial_vs_batched(args) -> dict:
     if args.smoke:
         traces, seeds, scales = ("fb_hadoop", "university"), (0,), (1.0,)
         ticks = args.ticks or 800
@@ -54,8 +100,7 @@ def main() -> None:
           f"{ticks} ticks each")
 
     t0 = time.time()
-    batch = make_batch(runs)
-    batched = run_sweep(batch, ticks)
+    batched = run_sweep(make_batch(runs), ticks)
     t_batched = time.time() - t0
     print(f"batched run_sweep : {t_batched:8.2f} s  "
           f"({n / t_batched:6.2f} scen/s, "
@@ -69,22 +114,14 @@ def main() -> None:
           f"{n * ticks / t_serial:9.0f} scen-ticks/s)")
 
     speedup = t_serial / t_batched
-    worst_key, worst = None, 0.0
-    for r_s, r_b in zip(serial, batched):
-        for k in PARITY_KEYS:
-            d = _rel_diff(r_s[k], r_b[k])
-            if d > worst:
-                worst_key, worst = f"{r_b['label']}:{k}", d
+    worst, worst_key = worst_parity(serial, batched)
     ok = worst <= args.tol
     print(f"speedup: {speedup:.2f}x  "
           f"(target >= 3x on the full grid)")
     print(f"max serial-vs-batched rel diff: {worst:.2e} "
           f"[{worst_key}] {'OK' if ok else f'> tol {args.tol:g}'}")
-
-    out = OUT.with_name("bench_sweep_smoke.json") if args.smoke else OUT
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps({
-        "smoke": args.smoke, "ticks": ticks, "scenarios": n,
+    return {
+        "ticks": ticks, "scenarios": n,
         "t_serial_s": round(t_serial, 3),
         "t_batched_s": round(t_batched, 3),
         "speedup": round(speedup, 3),
@@ -92,9 +129,167 @@ def main() -> None:
         "scen_ticks_per_s_serial": round(n * ticks / t_serial, 1),
         "max_rel_diff": worst, "max_rel_diff_key": worst_key,
         "metrics_match": ok,
+    }
+
+
+def bench_planner(args) -> dict:
+    """Planned vs single-hull on the bimodal acceptance mix."""
+    ticks = (args.ticks or 500) if args.smoke else (args.ticks or 4_000)
+    spec = TRAFFIC_SPECS["fb_hadoop"]
+    runs = [(SimParams(spec=spec, site=site), i)
+            for i, site in enumerate(BIMODAL_SITES)]
+    print(f"\nplanner: bimodal mix, {len(runs)} sites "
+          f"(3 small + 3 large), {ticks} ticks, max_compiles=2")
+
+    n0 = S.TRACE_COUNT
+    t0 = time.time()
+    single = run_sweep(make_multi_site_batch(runs), ticks)
+    t_single = time.time() - t0
+    traces_single = S.TRACE_COUNT - n0
+
+    n0 = S.TRACE_COUNT
+    t0 = time.time()
+    planned, plan = run_sweep_planned(runs, ticks, max_compiles=2,
+                                      return_plan=True)
+    t_planned = time.time() - t0
+    traces_planned = S.TRACE_COUNT - n0
+
+    worst, worst_key = worst_parity(single, planned)
+    ok = worst <= args.tol
+    savings = plan["savings_vs_single_hull_frac"]
+    print(f"single hull : {t_single:7.2f} s, {traces_single} trace(s), "
+          f"padded cost {plan['single_hull_cost']:.0f}")
+    print(f"planned K=2 : {t_planned:7.2f} s, {traces_planned} trace(s), "
+          f"padded cost {plan['padded_cost']:.0f}")
+    for b in plan["buckets"]:
+        print(f"  hull {b['hull']:22s} x{b['n_scenarios']}  "
+              f"waste {b['waste_frac']:6.1%}")
+    print(f"padded-compute savings: {savings:.1%} (require >= 30%)")
+    print(f"max planned-vs-single-hull rel diff: {worst:.2e} "
+          f"[{worst_key}] {'OK' if ok else f'> tol {args.tol:g}'}")
+
+    PLAN_OUT.parent.mkdir(parents=True, exist_ok=True)
+    PLAN_OUT.write_text(json.dumps({
+        "smoke": args.smoke, "ticks": ticks,
+        "t_single_hull_s": round(t_single, 3),
+        "t_planned_s": round(t_planned, 3),
+        "max_rel_diff": worst, "max_rel_diff_key": worst_key,
+        "plan": plan,
     }, indent=1))
+    print(f"written: {PLAN_OUT}")
+    return {
+        "planner_ticks": ticks,
+        "planner_savings_frac": savings,
+        "planner_waste_frac": plan["waste_frac"],
+        "planner_n_buckets": plan["n_buckets"],
+        "planner_traces": traces_planned,
+        "planner_max_rel_diff": worst,
+        "planner_max_rel_diff_key": worst_key,
+        "planner_metrics_match": ok,
+        "t_single_hull_s": round(t_single, 3),
+        "t_planned_s": round(t_planned, 3),
+        "planner_fingerprint": plan["fingerprint"],
+    }
+
+
+def check_baseline(current: dict, baseline: dict) -> list:
+    """Compare a run against the blessed baseline; returns failures."""
+    fails = []
+    for key, bands in baseline["bands"].items():
+        if key not in current:
+            fails.append(f"{key}: missing from current run")
+            continue
+        cur = current[key]
+        base = baseline["values"].get(key)
+        for btype, bval in bands.items():
+            # a blessed-relative band without a blessed value is a
+            # broken baseline (renamed metric, hand-edit): FAIL loudly
+            # rather than silently disabling the gate
+            if btype == "max_abs":
+                ok, want = cur <= bval, f"<= {bval:g}"
+            elif btype == "min_abs":
+                ok, want = cur >= bval, f">= {bval:g}"
+            elif btype == "min_frac_of_baseline":
+                ok = base is not None and cur >= base * bval
+                want = f">= {bval:g} x blessed {base}"
+            elif btype == "max_frac_of_baseline":
+                ok = base is not None and cur <= base * bval
+                want = f"<= {bval:g} x blessed {base}"
+            elif btype == "equal":
+                ok = base is not None and cur == base
+                want = f"== blessed {base}"
+            else:
+                ok, want = False, f"unknown band type {btype!r}"
+            status = "PASS" if ok else "FAIL"
+            print(f"  [{status}] {key} = {cur} (want {want})")
+            if not ok:
+                fails.append(f"{key}={cur} violates {btype} ({want})")
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid, <1 min, for use as a perf canary")
+    ap.add_argument("--tol", type=float, default=1e-3,
+                    help="max allowed cross-path relative metric diff")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="gate this run against benchmarks/baselines.json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="bless this run's values into baselines.json")
+    args = ap.parse_args()
+
+    results = {"smoke": args.smoke}
+    results.update(bench_serial_vs_batched(args))
+    results.update(bench_planner(args))
+
+    out = OUT.with_name("bench_sweep_smoke.json") if args.smoke else OUT
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=1))
     print(f"written: {out}")
-    if not ok:
+
+    mode = "smoke" if args.smoke else "full"
+    sane = results["metrics_match"] and results["planner_metrics_match"]
+    if args.update_baseline:
+        # never bless a run that failed its own parity checks — a
+        # broken run must not become the new reference
+        if not sane:
+            raise SystemExit("refusing to bless baseline: this run "
+                             "failed its parity checks (max_rel_diff / "
+                             "planner_max_rel_diff above --tol)")
+        bands = DEFAULT_BANDS
+        if BASELINE.exists():
+            prev = json.loads(BASELINE.read_text())
+            if prev.get("mode") == mode:      # keep hand-tuned bands
+                bands = prev.get("bands", DEFAULT_BANDS)
+        missing = [k for k in bands if k not in results]
+        if missing:
+            raise SystemExit("refusing to bless baseline: banded "
+                             f"metrics missing from this run: {missing}")
+        BASELINE.write_text(json.dumps({
+            "schema": 1, "mode": mode,
+            "values": {k: results[k] for k in bands},
+            "bands": bands,
+        }, indent=1) + "\n")
+        print(f"baseline blessed: {BASELINE}")
+
+    if args.check_baseline:
+        if not BASELINE.exists():
+            raise SystemExit(f"no baseline at {BASELINE}; bless one with "
+                             "--update-baseline and commit it")
+        baseline = json.loads(BASELINE.read_text())
+        if baseline.get("mode") != mode:
+            raise SystemExit(
+                f"baseline was blessed in {baseline.get('mode')!r} mode "
+                f"but this run is {mode!r}; re-bless or match modes")
+        print(f"\nbaseline gate ({BASELINE.name}, mode={mode}):")
+        fails = check_baseline(results, baseline)
+        if fails:
+            raise SystemExit("baseline gate FAILED:\n  "
+                             + "\n  ".join(fails))
+        print("baseline gate passed")
+    elif not sane:
         raise SystemExit(1)
 
 

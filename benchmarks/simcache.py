@@ -1,11 +1,14 @@
 """Shared simulation runner for the Fig 8/9/10 benchmarks: runs every
-trace (LC/DC + always-on baseline) as ONE batched sweep — a single
-compile + vmapped scan over the whole grid — and caches to results/.
+trace (LC/DC + always-on baseline) through the hull-bucketing sweep
+planner (core/planner.py; one site -> the K=1 degenerate bucket) and
+caches to results/.
 
 The cache key is not just ``ticks``: it carries the simulator's
-``SIM_SCHEMA_VERSION`` and the full site fingerprint, so results cached
-before a simulator semantics change (or for a different FBSite) are
-invalidated instead of silently served stale.
+``SIM_SCHEMA_VERSION``, the full site fingerprint, AND the planner's
+bucketing fingerprint (bucket assignment + hulls), so results cached
+before a simulator semantics change, for a different FBSite, or under a
+different bucketing plan are invalidated instead of silently served
+stale — planned and unplanned runs can never serve each other.
 """
 from __future__ import annotations
 
@@ -14,18 +17,27 @@ import json
 import time
 from pathlib import Path
 
+from repro.core import planner
 from repro.core.simulator import (SIM_SCHEMA_VERSION, SimParams,
-                                  _site_tag, make_batch, run_sweep)
-from repro.core.topology import FBSite
+                                  run_sweep_planned)
+from repro.core.topology import FBSite, full_site_tag
 from repro.core.traffic import TRAFFIC_SPECS
 
 OUT = Path(__file__).resolve().parents[1] / "results" / "sim_results.json"
 TICKS = 100_000
 
+#: every per-trace run is (LC/DC, always-on) on ONE site
+_RUNS_PER_TRACE = 2
 
-def _cache_meta(site: FBSite, ticks: int) -> dict:
+
+def _plan(site: FBSite, max_compiles: int) -> planner.SweepPlan:
+    return planner.plan_sites([site] * _RUNS_PER_TRACE, max_compiles)
+
+
+def _cache_meta(site: FBSite, ticks: int, max_compiles: int) -> dict:
     return {"sim_schema": SIM_SCHEMA_VERSION, "ticks": ticks,
-            "site": dataclasses.asdict(site)}
+            "site": dataclasses.asdict(site),
+            "plan": _plan(site, max_compiles).fingerprint}
 
 
 def _cache_path(site: FBSite, ticks: int) -> Path:
@@ -34,14 +46,12 @@ def _cache_path(site: FBSite, ticks: int) -> Path:
     # EVERY FBSite field so distinct sites never share a file
     if site == FBSite() and ticks == TICKS:
         return OUT
-    tag = (f"{_site_tag(site)}s{site.servers_per_rack}"
-           f"r{site.csw_ring_links}-{site.fc_ring_links}_{ticks}")
-    return OUT.with_name(f"sim_results_{tag}.json")
+    return OUT.with_name(f"sim_results_{full_site_tag(site)}_{ticks}.json")
 
 
 def get_results(ticks: int = TICKS, force: bool = False,
-                site: FBSite = FBSite()) -> dict:
-    meta = _cache_meta(site, ticks)
+                site: FBSite = FBSite(), max_compiles: int = 1) -> dict:
+    meta = _cache_meta(site, ticks, max_compiles)
     out = _cache_path(site, ticks)
     data = {"meta": meta, "ticks": ticks, "traces": {}}
     if out.exists() and not force:
@@ -53,16 +63,17 @@ def get_results(ticks: int = TICKS, force: bool = False,
     if not missing:
         return data
     out.parent.mkdir(parents=True, exist_ok=True)
-    # one B=2 sweep per missing trace: every call after the first reuses
-    # the same cached compile (identical batch shape), and the per-trace
-    # incremental save keeps an interrupted 100k-tick run resumable
+    # one planned B=2 sweep per missing trace: every call after the
+    # first reuses the same cached compile (identical bucket hulls and
+    # batch shapes), and the per-trace incremental save keeps an
+    # interrupted 100k-tick run resumable
     for name in missing:
         spec = TRAFFIC_SPECS[name]
         t0 = time.time()
-        lc, base = run_sweep(make_batch(
+        lc, base = run_sweep_planned(
             [(SimParams(spec=spec, site=site, gating_enabled=True), 0),
-             (SimParams(spec=spec, site=site, gating_enabled=False), 0)]),
-            ticks)
+             (SimParams(spec=spec, site=site, gating_enabled=False), 0)],
+            ticks, max_compiles=max_compiles)
         data["traces"][name] = {
             "lcdc": lc, "baseline": base,
             "wall_s": round(time.time() - t0, 1),

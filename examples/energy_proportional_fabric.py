@@ -6,7 +6,10 @@ step's ICI traffic (from the dry-run artifacts, if present).
 """
 from repro.core import ici_gating
 from repro.core.node_model import default_timing
-from repro.core.simulator import run_sweep, sweep_grid
+from repro.core.simulator import (SimParams, run_sweep, run_sweep_planned,
+                                  sweep_grid)
+from repro.core.topology import FBSite
+from repro.core.traffic import TRAFFIC_SPECS
 
 
 def main():
@@ -34,6 +37,24 @@ def main():
           f"ring detours {lc['delay_ring_us']:.3f} us")
     print(f"fraction of time >=half the gated links are off: "
           f"{lc['half_off_frac']:.0%}")
+
+    print("\n=== fabric design comparison (hull-bucketed sweep, 10k us) ===")
+    # heterogeneous sites through the planner: each hull bucket compiles
+    # tight instead of padding everything to the worst site
+    dense = FBSite(n_clusters=8, racks_per_cluster=16, csw_per_cluster=2,
+                   n_fc=2, csw_ring_links=4, fc_ring_links=8)
+    spec = TRAFFIC_SPECS["fb_hadoop"]
+    res, plan = run_sweep_planned(
+        [(SimParams(spec=spec), 0),
+         (SimParams(spec=spec, site=dense), 0)],
+        10_000, max_compiles=2, return_plan=True)
+    print(f"{plan['n_buckets']} hull buckets, padded-compute savings "
+          f"{plan['savings_vs_single_hull_frac']:.1%} vs one shared hull")
+    for r in res:
+        print(f"  {r['plan_hull']:18s} savings="
+              f"{r['switch_energy_savings_frac']:.1%} "
+              f"latency {r['mean_latency_us']:.2f} us "
+              f"(bucket {r['plan_bucket']})")
 
     print("\n=== TPU ICI fabric (beyond-paper) ===")
     rows = ici_gating.analyze_all()

@@ -98,6 +98,14 @@ per-rack randomness is keyed by the rack's logical id, so a site's
 metrics are identical whether it runs alone at exact dims or padded
 inside a heterogeneous batch.
 
+Padding to ONE hull wastes compute once site sizes diverge (every
+scenario steps the worst site's state). ``run_sweep_planned`` fixes
+that: it partitions the runs into a few hull buckets via the
+cost-model planner in core/planner.py (``max_compiles`` budget), runs
+each bucket as its own tight-hull batch, and merges results back in
+caller order with per-bucket padding-waste stats — same metrics
+(1e-3-pinned parity), a fraction of the padded compute.
+
 One-compile contract: ``run_sweep`` compiles exactly once per
 (hull topology, batch size, chunk length) — re-running the same-shaped
 sweep with different knob values (traces, watermarks, seeds, sites
@@ -133,7 +141,8 @@ import numpy as np
 
 from repro.core import constants as C
 from repro.core import gating
-from repro.core.topology import FBSite
+from repro.core.topology import (FBSite, full_site_tag, pad_hull,
+                                 site_tag)
 from repro.core.traffic import (TRAFFIC_SPECS, TrafficSpec,
                                 rack_flow_rate_per_tick, stack_specs)
 from repro.kernels import ops
@@ -150,8 +159,10 @@ CHUNK_TICKS = 10_000      # default scan chunk (accumulator fold period)
 #: bump when the step semantics change — cached results keyed on an
 #: older version (benchmarks/simcache.py) are invalidated
 #: (v3: in-scan delay histograms + wake-stall attribution, corrected
-#: half-open on_frac_hist buckets)
-SIM_SCHEMA_VERSION = 3
+#: half-open on_frac_hist buckets; v4: hull-bucketed planned sweeps —
+#: results carry plan_bucket/plan_hull, caches carry the plan
+#: fingerprint)
+SIM_SCHEMA_VERSION = 4
 
 #: number of times the sweep step has been traced (the one-compile probe)
 TRACE_COUNT = 0
@@ -166,6 +177,20 @@ PARITY_KEYS = (
     "delay_p50_us", "delay_p99_us", "delay_queue_us",
     "delay_wake_stall_us",
 )
+
+
+def worst_parity(ref_results, new_results):
+    """Worst relative PARITY_KEYS divergence between two result lists
+    (zipped pairwise); returns (diff, "label:key"). The one scan every
+    parity canary shares."""
+    worst_key, worst = None, 0.0
+    for r_a, r_b in zip(ref_results, new_results):
+        for k in PARITY_KEYS:
+            a, b = r_a[k], r_b[k]
+            d = abs(a - b) / max(abs(a), abs(b), 1e-9)
+            if d > worst:
+                worst_key, worst = f"{r_b['label']}:{k}", d
+    return worst, worst_key
 
 #: histogram bin edges in us (len DELAY_HIST_BINS + 1; see module
 #: docstring). Bin i covers [edge[i], edge[i+1]); the last bin also
@@ -291,21 +316,10 @@ class ScenarioBatch:
         return len(self.labels)
 
 
-def _pad_hull(sites: Sequence[FBSite]) -> FBSite:
-    """The smallest FBSite every site in the batch fits inside."""
-    return FBSite(
-        n_clusters=max(s.n_clusters for s in sites),
-        racks_per_cluster=max(s.racks_per_cluster for s in sites),
-        servers_per_rack=max(s.servers_per_rack for s in sites),
-        csw_per_cluster=max(s.csw_per_cluster for s in sites),
-        n_fc=max(s.n_fc for s in sites),
-        csw_ring_links=max(s.csw_ring_links for s in sites),
-        fc_ring_links=max(s.fc_ring_links for s in sites))
-
-
-def _site_tag(site: FBSite) -> str:
-    return (f"{site.n_clusters}x{site.racks_per_cluster}"
-            f"c{site.csw_per_cluster}f{site.n_fc}")
+# hull/tag helpers live in topology.py now (the planner shares them);
+# the old private names stay as aliases for existing callers
+_pad_hull = pad_hull
+_site_tag = site_tag
 
 
 def _build_batch(runs: Sequence[tuple[SimParams, int]],
@@ -911,6 +925,47 @@ def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
     if return_state:
         return res, jax.device_get(state)
     return res
+
+
+def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
+                      *, max_compiles: int = 4,
+                      chunk_ticks: int = CHUNK_TICKS,
+                      return_plan: bool = False):
+    """Run a heterogeneous-site sweep through the hull-bucketing planner
+    (core/planner.py): the (SimParams, seed) pairs are partitioned into
+    <= ``max_compiles`` hull buckets by estimated padded cost, each
+    bucket runs as its own ``make_multi_site_batch`` + ``run_sweep``
+    (one trace per (hull, batch-shape, chunk), exactly as before), and
+    the per-scenario metric dicts come back in CALLER order, each
+    annotated with its ``plan_bucket`` index and ``plan_hull`` tag.
+
+    With ``return_plan=True`` also returns the plan's padding-waste
+    report (``SweepPlan.report()``: per-bucket waste fractions, the
+    total padded cost, and the savings vs the single-hull K=1 path).
+
+    ``max_compiles=1`` is the degenerate single-hull case — identical
+    to ``run_sweep(make_multi_site_batch(runs), ...)`` (pinned by
+    tests/test_planner.py).
+    """
+    # local import: the planner is deliberately jax-free and usable
+    # standalone; only the execution path needs it
+    from repro.core import planner
+
+    runs = list(runs)
+    plan = planner.plan_sites([p.site for p, _ in runs], max_compiles)
+    results: list = [None] * len(runs)
+    for k, bucket in enumerate(plan.buckets):
+        batch = make_multi_site_batch([runs[i] for i in bucket.indices])
+        for i, r in zip(bucket.indices,
+                        run_sweep(batch, n_ticks, chunk_ticks=chunk_ticks)):
+            # the FULL tag — the same format the plan report's bucket
+            # "hull" field uses, so the two can be joined on it
+            r["plan_bucket"] = k
+            r["plan_hull"] = full_site_tag(bucket.hull)
+            results[i] = r
+    if return_plan:
+        return results, plan.report()
+    return results
 
 
 def _hist_quantile(hist: np.ndarray, q: float) -> float:

@@ -10,6 +10,7 @@ three Fat-Tree builds [28] by component count (``component_counts``).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Sequence
 
 from repro.core import constants as C
 
@@ -101,6 +102,35 @@ class FBSite:
 
     def total_transceiver_power_w(self) -> float:
         return sum(self.transceiver_power_w().values())
+
+
+def site_tag(site: FBSite) -> str:
+    """Compact ``<ncl>x<rpc>c<cpc>f<nfc>`` tag of the four hull-defining
+    axes; used in scenario labels, cache keys and planner reports."""
+    return (f"{site.n_clusters}x{site.racks_per_cluster}"
+            f"c{site.csw_per_cluster}f{site.n_fc}")
+
+
+def full_site_tag(site: FBSite) -> str:
+    """``site_tag`` extended with servers-per-rack and ring-link counts —
+    covers EVERY FBSite field, so two distinct sites never collide."""
+    return (f"{site_tag(site)}s{site.servers_per_rack}"
+            f"r{site.csw_ring_links}-{site.fc_ring_links}")
+
+
+def pad_hull(sites: Sequence[FBSite]) -> FBSite:
+    """The smallest FBSite every site in ``sites`` fits inside (per-axis
+    max). This is the static shape a multi-site batch compiles against;
+    the planner (core/planner.py) buckets scenarios to keep these hulls
+    tight."""
+    return FBSite(
+        n_clusters=max(s.n_clusters for s in sites),
+        racks_per_cluster=max(s.racks_per_cluster for s in sites),
+        servers_per_rack=max(s.servers_per_rack for s in sites),
+        csw_per_cluster=max(s.csw_per_cluster for s in sites),
+        n_fc=max(s.n_fc for s in sites),
+        csw_ring_links=max(s.csw_ring_links for s in sites),
+        fc_ring_links=max(s.fc_ring_links for s in sites))
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,188 @@
+"""Hull-bucketing sweep planner: partition/cost properties (pure
+python, no sim), and the planned execution path — K=1 degenerate parity
+with make_multi_site_batch, caller-order restoration under shuffled
+inputs, and the one-compile-per-bucket contract."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import planner
+from repro.core import simulator as S
+from repro.core.topology import FBSite, pad_hull
+from repro.core.traffic import TRAFFIC_SPECS
+
+# the same small heterogeneous sites as tests/test_topology_general.py,
+# but on a DIFFERENT (ticks, chunk) shape: that module pins an exact
+# trace count around its own sweep, so these tests must not pre-warm
+# its executable cache
+SITE_A = FBSite(n_clusters=2, racks_per_cluster=8, servers_per_rack=8,
+                csw_per_cluster=3, n_fc=2, csw_ring_links=4,
+                fc_ring_links=8)
+SITE_B = FBSite(n_clusters=3, racks_per_cluster=4, servers_per_rack=6,
+                csw_per_cluster=2, n_fc=3, csw_ring_links=4,
+                fc_ring_links=8)
+TICKS, CHUNK = 600, 250
+
+# bimodal mix: 3 small + 3 large fabrics (cheap pure-planner checks;
+# the executed acceptance version lives in benchmarks/bench_sweep.py)
+_SM = dict(n_clusters=2, servers_per_rack=8, csw_per_cluster=2, n_fc=2,
+           csw_ring_links=4, fc_ring_links=8)
+BIMODAL = (FBSite(racks_per_cluster=4, **_SM),
+           FBSite(racks_per_cluster=5, **_SM),
+           FBSite(racks_per_cluster=6, **_SM),
+           FBSite(), FBSite(racks_per_cluster=28),
+           FBSite(racks_per_cluster=24))
+
+
+# ---- cost model --------------------------------------------------------
+
+def test_flow_slots_in_sync():
+    """The planner's jax-free copy of the flow-slot width must track the
+    simulator's actual constant (the dominant cost-model term)."""
+    assert planner.FLOW_SLOTS == S.F_SLOTS
+
+
+def test_site_cost_monotone_per_axis():
+    base = FBSite()
+    for field, bigger in (("n_clusters", 8), ("racks_per_cluster", 64),
+                          ("csw_per_cluster", 8), ("n_fc", 8)):
+        grown = FBSite(**{field: bigger})
+        assert planner.site_cost(grown) > planner.site_cost(base), field
+
+
+def test_plan_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="empty"):
+        planner.plan_sites([])
+    with pytest.raises(ValueError, match="max_compiles"):
+        planner.plan_sites([FBSite()], max_compiles=0)
+
+
+# ---- bucketing properties (pure python) --------------------------------
+
+_POOL = (FBSite(n_clusters=1, racks_per_cluster=1, servers_per_rack=1,
+                csw_per_cluster=1, n_fc=1, csw_ring_links=1,
+                fc_ring_links=1),
+         BIMODAL[0], SITE_A, SITE_B, FBSite())
+
+
+@given(st.lists(st.integers(0, 4), min_size=1, max_size=12),
+       st.integers(1, 5))
+def test_bucketing_is_an_exact_partition(idxs, k):
+    """Bucketing never drops or duplicates a scenario, respects the
+    compile budget, fits every member inside its bucket hull, and its
+    padded cost is monotone: ideal <= plan(K) <= plan(K-1) <= ... <=
+    single hull."""
+    sites = [_POOL[i] for i in idxs]
+    plan = planner.plan_sites(sites, max_compiles=k)
+    seen = sorted(i for b in plan.buckets for i in b.indices)
+    assert seen == list(range(len(sites)))           # no drop, no dup
+    assert 1 <= len(plan.buckets) <= min(k, len(set(idxs)))
+    for b in plan.buckets:
+        assert b.hull == pad_hull([sites[i] for i in b.indices])
+        for i in b.indices:
+            s, h = sites[i], b.hull
+            assert (s.n_clusters <= h.n_clusters
+                    and s.racks_per_cluster <= h.racks_per_cluster
+                    and s.servers_per_rack <= h.servers_per_rack
+                    and s.csw_per_cluster <= h.csw_per_cluster
+                    and s.n_fc <= h.n_fc)
+    assert plan.ideal_cost <= plan.padded_cost + 1e-9
+    assert plan.padded_cost <= plan.single_hull_cost + 1e-9
+    if k > 1:
+        tighter_budget = planner.plan_sites(sites, max_compiles=k - 1)
+        assert plan.padded_cost <= tighter_budget.padded_cost + 1e-9
+
+
+def test_exact_site_groups_have_zero_waste():
+    """Budget >= distinct sites: every bucket hull IS its site — zero
+    padding waste, and identical sites share one bucket."""
+    sites = [SITE_A, SITE_B, SITE_A, SITE_B, SITE_A]
+    plan = planner.plan_sites(sites, max_compiles=4)
+    assert len(plan.buckets) == 2
+    for b in plan.buckets:
+        assert b.waste_frac == 0.0
+    assert plan.waste_frac == 0.0
+
+
+def test_bimodal_waste_monotone_and_savings():
+    """The acceptance shape, statically: on the 3-small + 3-large mix a
+    2-bucket plan cuts >= 30% of the single-hull padded compute, and
+    padded waste with K=2 is <= K=1."""
+    p1 = planner.plan_sites(BIMODAL, max_compiles=1)
+    p2 = planner.plan_sites(BIMODAL, max_compiles=2)
+    assert p1.savings_vs_single_hull_frac == 0.0     # K=1 IS the hull
+    assert p2.waste_frac <= p1.waste_frac + 1e-9
+    assert p2.padded_cost <= p1.padded_cost + 1e-9
+    assert p2.savings_vs_single_hull_frac >= 0.30
+    # the greedy merge must split small from large, not mix them
+    assert sorted(tuple(b.indices) for b in p2.buckets) == \
+        [(0, 1, 2), (3, 4, 5)]
+
+
+def test_fingerprint_tracks_plan_not_call_order():
+    sites = [SITE_A, SITE_B, SITE_A]
+    a = planner.plan_sites(sites, max_compiles=2)
+    b = planner.plan_sites(list(sites), max_compiles=2)
+    assert a.fingerprint == b.fingerprint            # deterministic
+    c = planner.plan_sites(sites, max_compiles=1)    # different buckets
+    assert c.fingerprint != a.fingerprint
+
+
+# ---- planned execution: parity + caller order + compile contract -------
+
+@pytest.fixture(scope="module")
+def mixed_runs():
+    h, u = TRAFFIC_SPECS["fb_hadoop"], TRAFFIC_SPECS["university"]
+    return [(S.SimParams(spec=h, site=SITE_A), 0),
+            (S.SimParams(spec=h, site=SITE_A, gating_enabled=False), 0),
+            (S.SimParams(spec=u, site=SITE_B, rate_scale=1.5), 1),
+            (S.SimParams(spec=u, site=SITE_B, gating_enabled=False), 1)]
+
+
+def test_k1_degenerate_matches_make_multi_site_batch(mixed_runs):
+    """max_compiles=1 is the old single-hull path, bit for bit: same
+    labels, same metrics (the planner only adds the plan_* keys)."""
+    single = S.run_sweep(S.make_multi_site_batch(mixed_runs), TICKS,
+                         chunk_ticks=CHUNK)
+    planned = S.run_sweep_planned(mixed_runs, TICKS, chunk_ticks=CHUNK,
+                                  max_compiles=1)
+    for a, b in zip(single, planned):
+        assert a["label"] == b["label"]
+        assert b["plan_bucket"] == 0
+        for k in S.PARITY_KEYS:
+            assert abs(a[k] - b[k]) <= 1e-3 * max(abs(a[k]), abs(b[k]),
+                                                  1e-9), (k, a[k], b[k])
+
+
+def test_planned_restores_caller_order_and_compiles_per_bucket(mixed_runs):
+    """Shuffled heterogeneous input comes back in caller order (labels
+    line up with make_multi_site_batch's for the same run list), each
+    bucket compiles exactly once, and a re-run under a different
+    shuffle reuses both executables and yields identical metrics."""
+    shuffled = [mixed_runs[i] for i in (2, 0, 3, 1)]   # interleave sites
+    expect_labels = S.make_multi_site_batch(shuffled).labels
+
+    n0 = S.TRACE_COUNT
+    res, plan = S.run_sweep_planned(shuffled, TICKS, chunk_ticks=CHUNK,
+                                    max_compiles=2, return_plan=True)
+    assert S.TRACE_COUNT - n0 == plan["n_buckets"] == 2
+    assert [r["label"] for r in res] == list(expect_labels)
+    # bucket membership: same-site scenarios share a bucket+hull tag
+    assert res[0]["plan_bucket"] == res[2]["plan_bucket"]
+    assert res[1]["plan_bucket"] == res[3]["plan_bucket"]
+    assert res[0]["plan_bucket"] != res[1]["plan_bucket"]
+    # the full tag, joinable against the plan report's bucket "hull"
+    assert res[1]["plan_hull"] == "2x8c3f2s8r4-8"    # SITE_A's own tag
+    assert res[1]["plan_hull"] in {b["hull"] for b in plan["buckets"]}
+
+    # different shuffle, same scenarios: cached executables (no new
+    # traces) and identical per-label metrics
+    reshuffled = [mixed_runs[i] for i in (1, 3, 0, 2)]
+    n1 = S.TRACE_COUNT
+    res2 = S.run_sweep_planned(reshuffled, TICKS, chunk_ticks=CHUNK,
+                               max_compiles=2)
+    assert S.TRACE_COUNT == n1
+    by_label = {r["label"]: r for r in res}
+    for r in res2:
+        ref = by_label[r["label"]]
+        for k in S.PARITY_KEYS:
+            assert r[k] == ref[k], (r["label"], k)
