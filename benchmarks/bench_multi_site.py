@@ -3,7 +3,11 @@ FBSite fabric shapes (same server population, different cluster / plane
 / core structure), each with LC/DC gating and the always-on baseline,
 run through the hull-bucketing sweep planner — a handful of vmapped
 compiles (``--max-compiles``, one per hull bucket, remainder tails
-included) instead of one compile on the worst-case padded hull.
+included) instead of one compile on the worst-case padded hull. The
+buckets execute as an async pipeline (all chunk programs dispatched
+before any result is fetched; ``--no-pipeline`` for strictly serial
+buckets) with the device-resident fold's one-host-transfer-per-bucket
+contract enforced.
 
 This is the dynamic companion to topology.all_designs() (the paper's
 static Fig 1 component-count power table, also printed for context):
@@ -56,6 +60,9 @@ def main() -> None:
     ap.add_argument("--tol", type=float, default=1e-3)
     ap.add_argument("--max-compiles", type=int, default=2,
                     help="planner hull-bucket budget (1 = old single-hull)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="run hull buckets strictly serially instead of "
+                         "async-dispatching them all before fetching")
     args = ap.parse_args()
 
     # deliberately NOT a multiple of the chunk: the remainder tail must
@@ -70,19 +77,29 @@ def main() -> None:
           f"trace={args.trace}, {ticks} ticks (chunk {chunk}), "
           f"max_compiles={args.max_compiles}")
 
-    n0 = S.TRACE_COUNT
+    n0, h0 = S.TRACE_COUNT, S.HOST_TRANSFER_COUNT
     t0 = time.time()
     res, plan = S.run_sweep_planned(runs, ticks, chunk_ticks=chunk,
                                     max_compiles=args.max_compiles,
-                                    return_plan=True)
+                                    return_plan=True,
+                                    pipeline=not args.no_pipeline)
     wall = time.time() - t0
     traces = S.TRACE_COUNT - n0
-    print(f"planned multi-site sweep: {wall:.2f} s, step traces: {traces} "
+    transfers = S.HOST_TRANSFER_COUNT - h0
+    how = ("serial buckets" if args.no_pipeline else
+           f"async pipeline, dispatch order {plan['dispatch_order']}")
+    print(f"planned multi-site sweep: {wall:.2f} s ({how}), "
+          f"step traces: {traces} "
           f"(contract: one per hull bucket = {plan['n_buckets']}, "
-          f"remainder tails included)")
+          f"remainder tails included), host transfers: {transfers} "
+          f"(contract: one fold fetch per bucket)")
     if traces != plan["n_buckets"]:
         raise SystemExit("one-compile-per-bucket contract broken: "
                          f"{traces} traces for {plan['n_buckets']} buckets")
+    if transfers > plan["n_buckets"]:
+        raise SystemExit("one-transfer-per-bucket contract broken: "
+                         f"{transfers} host transfers for "
+                         f"{plan['n_buckets']} buckets")
 
     print(f"\n--- hull-bucket plan (padded-compute savings "
           f"{plan['savings_vs_single_hull_frac']:.1%} vs single hull) ---")
@@ -133,7 +150,9 @@ def main() -> None:
     OUT.write_text(json.dumps({
         "smoke": args.smoke, "trace": args.trace, "ticks": ticks,
         "chunk_ticks": chunk, "scenarios": len(runs),
-        "step_traces": traces, "wall_s": round(wall, 3),
+        "step_traces": traces, "host_transfers": transfers,
+        "pipelined": not args.no_pipeline, "exec": S.execution_mode(),
+        "wall_s": round(wall, 3),
         "checked": bool(args.check), "max_rel_diff": worst,
         "plan": plan,
         "sites": rows,

@@ -1,6 +1,6 @@
 """Sweep-engine benchmark + the CI perf/parity regression gate.
 
-Two sections, both written to results/ and both gated by the committed
+Three sections, all written to results/ and all gated by the committed
 baseline (benchmarks/baselines.json) under ``--check-baseline``:
 
 1. serial vs batched — the full Fig 9/10 evaluation grid (every traffic
@@ -10,14 +10,28 @@ baseline (benchmarks/baselines.json) under ``--check-baseline``:
    scenario-ticks/sec, the wall-clock speedup, and the worst
    per-scenario metric divergence between the two paths.
 
-2. hull-bucketing planner — the acceptance mix: a bimodal 6-site batch
-   (3 small + 3 large fabrics) through ``run_sweep_planned(
-   max_compiles=2)`` vs the single-hull ``make_multi_site_batch`` path;
-   reports the modeled padded-compute savings (>= 30% required), the
-   trace counts (one compile per hull bucket), and the worst metric
-   divergence between planned and single-hull results. The bucketing
-   report is also written to results/bench_planner_report.json (a CI
-   build artifact).
+2. device fold vs host fold — the bimodal acceptance mix on a
+   multi-chunk run: the device-resident Kahan fold (one host transfer
+   for the whole run) against the legacy per-chunk host fold; reports
+   wall clock for both, the host-transfer counts (the device path MUST
+   do exactly 1), and the worst metric divergence (<= 1e-6: Kahan
+   compensation holds the cross-chunk float32 error at O(eps)).
+
+3. hull-bucketing planner — the acceptance mix: a bimodal 6-site batch
+   (3 small + 3 large fabrics) through the async-pipelined
+   ``run_sweep_planned(max_compiles=2)`` vs the single-hull
+   ``make_multi_site_batch`` path, multi-chunk; reports the modeled
+   padded-compute savings (>= 30% required), the trace counts (one
+   compile per hull bucket), the host-transfer count (<= 1 per
+   bucket), and the worst metric divergence between planned and
+   single-hull results. The bucketing report is also written to
+   results/bench_planner_report.json (a CI build artifact).
+
+Under ``--check-baseline`` the run additionally emits a
+machine-readable perf-trajectory record at the repo root
+(``BENCH_<n>.json``, n = the PR index derived from CHANGES.md;
+speedups, parity, bucket + host-transfer stats, execution mode, gate
+outcome) so future PRs have a bench trajectory to compare against.
 
   PYTHONPATH=src python -m benchmarks.bench_sweep            # full grid
   PYTHONPATH=src python -m benchmarks.bench_sweep --smoke    # <1 min canary
@@ -52,6 +66,25 @@ RESULTS = Path(__file__).resolve().parents[1] / "results"
 OUT = RESULTS / "bench_sweep.json"
 PLAN_OUT = RESULTS / "bench_planner_report.json"
 BASELINE = Path(__file__).resolve().with_name("baselines.json")
+CHANGES = Path(__file__).resolve().parents[1] / "CHANGES.md"
+
+
+def _pr_index() -> int:
+    """The current PR number, derived from CHANGES.md (one `- PR n:`
+    line per landed PR) — keeps the BENCH_<n>.json trajectory record
+    self-labeling so future PRs append to the trajectory instead of
+    overwriting this one's record with a stale label."""
+    try:
+        return sum(1 for ln in CHANGES.read_text().splitlines()
+                   if ln.startswith("- PR"))
+    except OSError:
+        return 0
+
+
+def _trajectory_path() -> Path:
+    """The machine-readable perf-trajectory record (repo root), emitted
+    by --check-baseline runs: PR-over-PR speedup/parity/bucket stats."""
+    return CHANGES.with_name(f"BENCH_{_pr_index()}.json")
 
 # the acceptance-criteria mix: 3 small + 3 large fabrics whose shared
 # hull would waste most of the compute on padding the small ones
@@ -75,11 +108,19 @@ DEFAULT_BANDS = {
     "scen_ticks_per_s_batched": {"min_frac_of_baseline": 0.20},
     "t_batched_s": {"max_frac_of_baseline": 5.0},
     "max_rel_diff": {"max_abs": 1e-3},
+    # device-resident fold: parity vs the host-fold reference is a hard
+    # 1e-6 bound (compensated f32), the transfer count a hard pin, the
+    # wall-clock ratio a generous machine band
+    "fold_max_rel_diff": {"max_abs": 1e-6},
+    "fold_host_transfers_device": {"equal": True},
+    "fold_speedup": {"min_frac_of_baseline": 0.20},
     "planner_savings_frac": {"min_abs": 0.30,
                              "min_frac_of_baseline": 0.90},
     "planner_max_rel_diff": {"max_abs": 1e-3},
     "planner_n_buckets": {"equal": True},
     "planner_traces": {"equal": True},
+    # async bucket pipeline: exactly one fold fetch per bucket
+    "host_transfers_per_bucket": {"max_abs": 1.0},
 }
 
 
@@ -132,34 +173,116 @@ def bench_serial_vs_batched(args) -> dict:
     }
 
 
-def bench_planner(args) -> dict:
-    """Planned vs single-hull on the bimodal acceptance mix."""
-    ticks = (args.ticks or 500) if args.smoke else (args.ticks or 4_000)
+def _bimodal_runs():
     spec = TRAFFIC_SPECS["fb_hadoop"]
-    runs = [(SimParams(spec=spec, site=site), i)
+    return [(SimParams(spec=spec, site=site), i)
             for i, site in enumerate(BIMODAL_SITES)]
+
+
+def bench_fold(args) -> dict:
+    """Device-resident fold vs the legacy per-chunk host fold on a
+    multi-chunk run of the acceptance mix (single hull, so the two
+    paths time the exact same simulation work)."""
+    # >= 15 chunks: the paths differ by a fixed per-chunk sync cost, so
+    # enough boundaries are needed for the delta to clear timing noise
+    # on a small CI machine (measured stable at this scale)
+    ticks, chunk = (1_500, 100) if args.smoke else (8_000, 400)
+    if args.ticks:
+        ticks, chunk = args.ticks, max(1, args.ticks // 15)
+    n_chunks = -(-ticks // chunk)
+    batch = make_multi_site_batch(_bimodal_runs())
+    print(f"\nfold: bimodal mix as one hull, {ticks} ticks in "
+          f"{n_chunks} chunks of {chunk}")
+
+    # warm both fold programs (same (hull, B, chunk) key as the timed
+    # runs, so the timed section measures execution, not compile)
+    run_sweep(batch, 2 * chunk, chunk_ticks=chunk)
+    run_sweep(batch, 2 * chunk, chunk_ticks=chunk, fold="host")
+
+    # best-of-4 reps, order swapped each rep: the first run after a
+    # warmup carries allocator/cache noise and a fixed A-then-B order
+    # systematically favors one path — both misread single-shot timing
+    t_host = t_dev = float("inf")
+    for rep in range(4):
+        for which in (("host", "device") if rep % 2 == 0
+                      else ("device", "host")):
+            h0 = S.HOST_TRANSFER_COUNT
+            t0 = time.time()
+            if which == "host":
+                host_res = run_sweep(batch, ticks, chunk_ticks=chunk,
+                                     fold="host")
+                t_host = min(t_host, time.time() - t0)
+                transfers_host = S.HOST_TRANSFER_COUNT - h0
+            else:
+                dev_res = run_sweep(batch, ticks, chunk_ticks=chunk)
+                t_dev = min(t_dev, time.time() - t0)
+                transfers_dev = S.HOST_TRANSFER_COUNT - h0
+
+    worst, worst_key = worst_parity(host_res, dev_res)
+    ok = worst <= 1e-6 and transfers_dev == 1
+    print(f"host fold   : {t_host:7.2f} s, {transfers_host} host "
+          f"transfers ({n_chunks} chunks)")
+    print(f"device fold : {t_dev:7.2f} s, {transfers_dev} host "
+          f"transfer(s) (require exactly 1)")
+    print(f"max device-vs-host-fold rel diff: {worst:.2e} [{worst_key}] "
+          f"{'OK' if ok else '> 1e-6 or extra transfers'}")
+    return {
+        "fold_ticks": ticks, "fold_chunks": n_chunks,
+        "t_fold_host_s": round(t_host, 3),
+        "t_fold_device_s": round(t_dev, 3),
+        "fold_speedup": round(t_host / t_dev, 3),
+        "fold_host_transfers_host": transfers_host,
+        "fold_host_transfers_device": transfers_dev,
+        "fold_max_rel_diff": worst, "fold_max_rel_diff_key": worst_key,
+        "fold_metrics_match": ok,
+    }
+
+
+def bench_planner(args) -> dict:
+    """Planned (async-pipelined) vs single-hull on the bimodal
+    acceptance mix, multi-chunk."""
+    ticks = (args.ticks or 500) if args.smoke else (args.ticks or 4_000)
+    chunk = max(1, ticks // 5)      # force a multi-chunk run
+    runs = _bimodal_runs()
     print(f"\nplanner: bimodal mix, {len(runs)} sites "
-          f"(3 small + 3 large), {ticks} ticks, max_compiles=2")
+          f"(3 small + 3 large), {ticks} ticks (chunk {chunk}), "
+          f"max_compiles=2")
+
+    # warm BOTH paths at the timed (hull, B, chunk) keys so the timed
+    # section compares execution, not compile (the planned path would
+    # otherwise pay its bucket compiles inside the timed region and the
+    # trajectory record would report a bogus planner slowdown). The
+    # one-compile-per-bucket contract is pinned on the COLD warmup run,
+    # where the traces actually happen.
+    run_sweep(make_multi_site_batch(runs), 2 * chunk, chunk_ticks=chunk)
+    n0 = S.TRACE_COUNT
+    run_sweep_planned(runs, 2 * chunk, max_compiles=2, chunk_ticks=chunk)
+    traces_planned = S.TRACE_COUNT - n0
 
     n0 = S.TRACE_COUNT
     t0 = time.time()
-    single = run_sweep(make_multi_site_batch(runs), ticks)
+    single = run_sweep(make_multi_site_batch(runs), ticks,
+                       chunk_ticks=chunk)
     t_single = time.time() - t0
     traces_single = S.TRACE_COUNT - n0
 
-    n0 = S.TRACE_COUNT
+    h0 = S.HOST_TRANSFER_COUNT
     t0 = time.time()
     planned, plan = run_sweep_planned(runs, ticks, max_compiles=2,
-                                      return_plan=True)
+                                      chunk_ticks=chunk, return_plan=True)
     t_planned = time.time() - t0
-    traces_planned = S.TRACE_COUNT - n0
+    transfers_planned = S.HOST_TRANSFER_COUNT - h0
 
     worst, worst_key = worst_parity(single, planned)
-    ok = worst <= args.tol
+    transfers_per_bucket = transfers_planned / max(plan["n_buckets"], 1)
+    ok = worst <= args.tol and transfers_per_bucket <= 1.0
     savings = plan["savings_vs_single_hull_frac"]
     print(f"single hull : {t_single:7.2f} s, {traces_single} trace(s), "
           f"padded cost {plan['single_hull_cost']:.0f}")
     print(f"planned K=2 : {t_planned:7.2f} s, {traces_planned} trace(s), "
+          f"{transfers_planned} host transfer(s) for "
+          f"{plan['n_buckets']} buckets (require <= 1 per bucket), "
+          f"dispatch order {plan['dispatch_order']}, "
           f"padded cost {plan['padded_cost']:.0f}")
     for b in plan["buckets"]:
         print(f"  hull {b['hull']:22s} x{b['n_scenarios']}  "
@@ -179,10 +302,14 @@ def bench_planner(args) -> dict:
     print(f"written: {PLAN_OUT}")
     return {
         "planner_ticks": ticks,
+        "planner_chunk_ticks": chunk,
         "planner_savings_frac": savings,
         "planner_waste_frac": plan["waste_frac"],
         "planner_n_buckets": plan["n_buckets"],
         "planner_traces": traces_planned,
+        "planner_host_transfers": transfers_planned,
+        "host_transfers_per_bucket": transfers_per_bucket,
+        "planner_dispatch_order": plan["dispatch_order"],
         "planner_max_rel_diff": worst,
         "planner_max_rel_diff_key": worst_key,
         "planner_metrics_match": ok,
@@ -240,8 +367,9 @@ def main() -> None:
                     help="bless this run's values into baselines.json")
     args = ap.parse_args()
 
-    results = {"smoke": args.smoke}
+    results = {"smoke": args.smoke, "exec": S.execution_mode()}
     results.update(bench_serial_vs_batched(args))
+    results.update(bench_fold(args))
     results.update(bench_planner(args))
 
     out = OUT.with_name("bench_sweep_smoke.json") if args.smoke else OUT
@@ -250,7 +378,8 @@ def main() -> None:
     print(f"written: {out}")
 
     mode = "smoke" if args.smoke else "full"
-    sane = results["metrics_match"] and results["planner_metrics_match"]
+    sane = (results["metrics_match"] and results["planner_metrics_match"]
+            and results["fold_metrics_match"])
     if args.update_baseline:
         # never bless a run that failed its own parity checks — a
         # broken run must not become the new reference
@@ -261,8 +390,11 @@ def main() -> None:
         bands = DEFAULT_BANDS
         if BASELINE.exists():
             prev = json.loads(BASELINE.read_text())
-            if prev.get("mode") == mode:      # keep hand-tuned bands
-                bands = prev.get("bands", DEFAULT_BANDS)
+            if prev.get("mode") == mode:
+                # keep hand-tuned bands for metrics that already had
+                # one, but pick up newly introduced default bands too
+                # (a re-bless must not silently drop a new gate)
+                bands = {**DEFAULT_BANDS, **prev.get("bands", {})}
         missing = [k for k in bands if k not in results]
         if missing:
             raise SystemExit("refusing to bless baseline: banded "
@@ -285,6 +417,43 @@ def main() -> None:
                 f"but this run is {mode!r}; re-bless or match modes")
         print(f"\nbaseline gate ({BASELINE.name}, mode={mode}):")
         fails = check_baseline(results, baseline)
+        # the perf-trajectory record: written even on gate failure (the
+        # trajectory should record regressions, not hide them)
+        trajectory = _trajectory_path()
+        trajectory.write_text(json.dumps({
+            "pr": _pr_index(), "bench": "bench_sweep", "mode": mode,
+            "gate": "failed" if fails else "passed",
+            "exec": results["exec"],
+            "speedups": {
+                "serial_vs_batched": results["speedup"],
+                "fold_host_vs_device": results["fold_speedup"],
+                "scen_ticks_per_s_batched":
+                    results["scen_ticks_per_s_batched"],
+            },
+            "parity": {
+                "serial_vs_batched": results["max_rel_diff"],
+                "fold_device_vs_host": results["fold_max_rel_diff"],
+                "planned_vs_single_hull": results["planner_max_rel_diff"],
+            },
+            "buckets": {
+                "n_buckets": results["planner_n_buckets"],
+                "traces": results["planner_traces"],
+                "host_transfers_per_bucket":
+                    results["host_transfers_per_bucket"],
+                "dispatch_order": results["planner_dispatch_order"],
+                "savings_frac": results["planner_savings_frac"],
+                "waste_frac": results["planner_waste_frac"],
+            },
+            "timings_s": {
+                "batched": results["t_batched_s"],
+                "serial": results["t_serial_s"],
+                "fold_device": results["t_fold_device_s"],
+                "fold_host": results["t_fold_host_s"],
+                "planned": results["t_planned_s"],
+                "single_hull": results["t_single_hull_s"],
+            },
+        }, indent=1) + "\n")
+        print(f"trajectory record written: {trajectory}")
         if fails:
             raise SystemExit("baseline gate FAILED:\n  "
                              + "\n  ".join(fails))

@@ -4,11 +4,15 @@ planner (core/planner.py; one site -> the K=1 degenerate bucket) and
 caches to results/.
 
 The cache key is not just ``ticks``: it carries the simulator's
-``SIM_SCHEMA_VERSION``, the full site fingerprint, AND the planner's
-bucketing fingerprint (bucket assignment + hulls), so results cached
-before a simulator semantics change, for a different FBSite, or under a
-different bucketing plan are invalidated instead of silently served
-stale — planned and unplanned runs can never serve each other.
+``SIM_SCHEMA_VERSION``, the full site fingerprint, the planner's
+bucketing fingerprint (bucket assignment + hulls), AND the execution
+mode (fold path + fold precision + device layout,
+``simulator.execution_mode()``), so results cached before a simulator
+semantics change, for a different FBSite, under a different bucketing
+plan, or under a different execution layout (e.g. host fold vs the
+device-resident Kahan fold, 1 device vs a sharded scenario axis) are
+invalidated instead of silently served stale — no two of those
+configurations can ever serve each other.
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ from pathlib import Path
 
 from repro.core import planner
 from repro.core.simulator import (SIM_SCHEMA_VERSION, SimParams,
-                                  run_sweep_planned)
+                                  execution_mode, run_sweep_planned)
 from repro.core.topology import FBSite, full_site_tag
 from repro.core.traffic import TRAFFIC_SPECS
 
@@ -37,7 +41,8 @@ def _plan(site: FBSite, max_compiles: int) -> planner.SweepPlan:
 def _cache_meta(site: FBSite, ticks: int, max_compiles: int) -> dict:
     return {"sim_schema": SIM_SCHEMA_VERSION, "ticks": ticks,
             "site": dataclasses.asdict(site),
-            "plan": _plan(site, max_compiles).fingerprint}
+            "plan": _plan(site, max_compiles).fingerprint,
+            "exec": execution_mode(n_scenarios=_RUNS_PER_TRACE)}
 
 
 def _cache_path(site: FBSite, ticks: int) -> Path:

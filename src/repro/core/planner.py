@@ -15,9 +15,11 @@ The planner splits the sweep into K buckets — K compiles instead of
 one — chosen so the total *padded cost* (estimated step cost of the
 bucket hull x scenarios in the bucket) is small, under a caller-set
 ``max_compiles`` budget. ``simulator.run_sweep_planned`` then executes
-the buckets back-to-back (each bucket is an ordinary
-``make_multi_site_batch`` + ``run_sweep``, so the one-trace-per-(hull,
-batch-shape, chunk) contract holds per bucket) and merges results back
+the buckets as an async pipeline — dispatched in ``dispatch_order``
+(largest padded cost first, so later buckets' trace/compile overlaps
+the big bucket's device execution), each bucket an ordinary
+``make_multi_site_batch`` + chunk dispatch, so the one-trace-per-(hull,
+batch-shape, chunk) contract holds per bucket — and merges results back
 into caller order.
 
 Cost model
@@ -141,6 +143,18 @@ class SweepPlan:
         return 1.0 - self.padded_cost / max(self.single_hull_cost, 1e-12)
 
     @property
+    def dispatch_order(self) -> tuple:
+        """Bucket indices in descending padded-cost order — the async
+        pipeline's dispatch schedule (simulator.run_sweep_planned): the
+        most expensive bucket launches first so the cheaper buckets'
+        trace/compile time overlaps its device execution. Ties break on
+        the caller-order bucket index, keeping the order deterministic
+        (result order is unaffected: fetches merge by caller index)."""
+        return tuple(sorted(
+            range(len(self.buckets)),
+            key=lambda k: (-self.buckets[k].padded_cost, k)))
+
+    @property
     def fingerprint(self) -> str:
         """Stable hash of (bucket assignment, bucket hulls) — the cache
         namespace for planned results (benchmarks/simcache.py)."""
@@ -164,6 +178,7 @@ class SweepPlan:
             "waste_frac": self.waste_frac,
             "single_hull_cost": self.single_hull_cost,
             "savings_vs_single_hull_frac": self.savings_vs_single_hull_frac,
+            "dispatch_order": list(self.dispatch_order),
             "fingerprint": self.fingerprint,
             "buckets": [{
                 "hull": full_site_tag(b.hull),

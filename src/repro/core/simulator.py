@@ -58,9 +58,10 @@ Samples are binned into a fixed log-spaced histogram
 [0, DELAY_HIST_MIN_US); bin i covers [MIN * 2**((i-1)/BPO),
 MIN * 2**(i/BPO)) with BPO = DELAY_HIST_BINS_PER_OCTAVE = 6; the last
 bin absorbs overflow; edges in ``DELAY_BIN_EDGES_US``). The histogram
-is an ordinary accumulator: folded into float64 at chunk boundaries
-like every other one, so memory stays bounded for arbitrarily long
-runs. ``_finalize`` extracts log-interpolated ``delay_p50_us`` /
+is an ordinary accumulator: folded into the device-resident fold
+buffer at chunk boundaries like every other one (see
+"Device-resident execution" below), so memory stays bounded for
+arbitrarily long runs. ``_finalize`` extracts log-interpolated ``delay_p50_us`` /
 ``delay_p95_us`` / ``delay_p99_us``, the normalized ``delay_hist``,
 and the attribution split ``delay_queue_us`` (queueing) /
 ``delay_wake_stall_us`` (STAGE_UP_DELAY stalls) / ``delay_ring_us``
@@ -112,12 +113,46 @@ sweep with different knob values (traces, watermarks, seeds, sites
 fitting the same hull, ...) reuses the cached executable;
 ``TRACE_COUNT`` counts step traces so tests can pin this. Long runs are
 chunked (``chunk_ticks``, default 10k): the jitted chunk donates its
-carry on accelerator backends and at every chunk boundary the
-per-scenario accumulators are folded into float64 host accumulators and
-zeroed on device, bounding both scan memory and float32 accumulation
-error. A remainder (``n_ticks % chunk_ticks != 0``) does NOT compile a
-second program: the tail runs the same fixed-length chunk with a live
-mask, dead ticks passing the carry through unchanged.
+carry on accelerator backends. A remainder (``n_ticks % chunk_ticks !=
+0``) does NOT compile a second program: the tail runs the same
+fixed-length chunk with a live mask, dead ticks passing the carry
+through unchanged.
+
+Device-resident execution
+-------------------------
+The per-chunk accumulator fold happens ON DEVICE, inside the same
+jitted chunk program as the scan: a per-scenario fold buffer (float64
+where the backend enables x64, otherwise a compensated Kahan float32
+``(sum, comp)`` pair) absorbs each chunk's accumulators and the in-scan
+accumulators are re-zeroed, all without leaving the device. The chunk
+loop is therefore pure async dispatch — no host synchronization at
+chunk boundaries — and the entire run performs exactly ONE host
+transfer (the final fold fetch; ``HOST_TRANSFER_COUNT`` counts these so
+benchmarks/bench_sweep.py can gate it). Kahan compensation bounds the
+cross-chunk float32 accumulation error at O(eps) independent of chunk
+count, so device-fold metrics match the legacy host-fold path
+(``fold="host"``: per-chunk ``device_get`` + float64 numpy fold, kept
+for parity pinning) to <= 1e-6 relative.
+
+The scenario batch axis additionally shards across all local devices
+(``shard=None`` auto-enables when >1 device is visible; CPU CI
+exercises it with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+Scenario knobs, sim state and fold buffers are placed with a
+``NamedSharding`` over the batch axis; batches that don't divide the
+device count are padded with copies of scenario 0 and the pad rows
+dropped before finalization — scenarios are independent vmap lanes, so
+padding and sharding are bit-inert for every real scenario's metrics
+(tests/test_sharding.py pins this on 4 fake devices).
+
+``run_sweep_planned`` pipelines its hull buckets: every bucket's chunk
+programs are DISPATCHED first (largest padded cost first, the planner's
+``dispatch_order``, so tracing/compiling bucket k+1 overlaps device
+execution of bucket k), and results are fetched afterwards — one
+blocking transfer per bucket, no interleaved blocking. Caller-order
+results, ``plan_bucket``/``plan_hull`` annotation and the
+one-trace-per-(hull, batch-shape, chunk) contract are preserved
+(``pipeline=False`` recovers strictly serial bucket execution,
+bit-identically).
 
 The per-switch scheduling/enqueue/serve/watermark block of the hot loop
 runs through ``ops.switch_step`` — the Pallas kernel on TPU, its
@@ -161,11 +196,19 @@ CHUNK_TICKS = 10_000      # default scan chunk (accumulator fold period)
 #: (v3: in-scan delay histograms + wake-stall attribution, corrected
 #: half-open on_frac_hist buckets; v4: hull-bucketed planned sweeps —
 #: results carry plan_bucket/plan_hull, caches carry the plan
-#: fingerprint)
-SIM_SCHEMA_VERSION = 4
+#: fingerprint; v5: device-resident accumulator fold + scenario-axis
+#: sharding — caches additionally carry the execution mode)
+SIM_SCHEMA_VERSION = 5
 
 #: number of times the sweep step has been traced (the one-compile probe)
 TRACE_COUNT = 0
+
+#: number of accumulator host transfers the sweep engine has performed
+#: (``device_get`` of fold buffers / in-scan accumulators). The
+#: device-resident fold path does exactly ONE per run_sweep (one per
+#: planned bucket); the legacy ``fold="host"`` path does one per chunk.
+#: benchmarks/bench_sweep.py gates transfers-per-bucket <= 1 on this.
+HOST_TRANSFER_COUNT = 0
 
 #: scalar metrics that must agree between run_sim and run_sweep — the
 #: shared contract checked by tests/test_sweep.py and the
@@ -847,8 +890,41 @@ def make_sim_step(hull: FBSite):
     return step
 
 
+def _fold_dtype():
+    """The device fold-buffer dtype: float64 where the backend enables
+    x64, otherwise float32 (compensated with a Kahan pair)."""
+    return jax.dtypes.canonicalize_dtype(np.float64)
+
+
+def _should_shard(n_scenarios: int, shard: bool | None) -> bool:
+    """THE sharding-eligibility predicate, shared by ``_start_sweep``
+    (actual execution) and ``execution_mode`` (cache keys / records) so
+    the two can never drift: shard when more than one local device is
+    visible and the batch has more than one scenario (a single
+    scenario has nothing to distribute)."""
+    n_dev = jax.local_device_count()
+    want = shard if shard is not None else n_dev > 1
+    return bool(want and n_dev > 1 and n_scenarios > 1)
+
+
+def execution_mode(*, fold: str = "device", shard: bool | None = None,
+                   n_scenarios: int | None = None):
+    """The execution-layer knobs that can shift float results — joined
+    into result-cache keys (benchmarks/simcache.py) so runs under a
+    different fold path, fold precision or device layout never serve
+    each other stale results. Pass ``n_scenarios`` (the batch size)
+    when known: it applies the same ``_should_shard`` predicate
+    ``_start_sweep`` uses, so the reported layout matches the actual
+    execution."""
+    sharded = _should_shard(2 if n_scenarios is None else n_scenarios,
+                            shard)
+    return {"fold": fold,
+            "fold_dtype": jnp.dtype(_fold_dtype()).name,
+            "devices": jax.local_device_count() if sharded else 1}
+
+
 def _sweep_chunk_impl(site: FBSite, scen: Scenario, state: SimState,
-                      length: int, live) -> SimState:
+                      length: int, live, fold):
     global TRACE_COUNT
     TRACE_COUNT += 1          # python side effect: counts traces only
     step = make_sim_step(site)
@@ -863,7 +939,21 @@ def _sweep_chunk_impl(site: FBSite, scen: Scenario, state: SimState,
                             lambda s: s, st), None
 
     out, _ = jax.lax.scan(tick, state, live, length=length)
-    return out
+    if fold is None:          # legacy host-fold path: caller fetches acc
+        return out, None
+    # device-resident fold: absorb this chunk's accumulators into the
+    # (sum, comp) Kahan buffer and re-zero them, all inside this same
+    # program — the chunk loop never synchronizes with the host
+    fsum, fcomp = fold
+    nsum, ncomp = {}, {}
+    for k in out.acc:
+        v = out.acc[k].astype(fsum[k].dtype)
+        y = v - fcomp[k]
+        t = fsum[k] + y
+        nsum[k] = t
+        ncomp[k] = (t - fsum[k]) - y
+    out = out._replace(acc=jax.tree.map(jnp.zeros_like, out.acc))
+    return out, (nsum, ncomp)
 
 
 @functools.lru_cache(maxsize=None)
@@ -871,13 +961,148 @@ def _sweep_runner():
     # carry donation is a no-op (warning) on CPU; enable it only where
     # the backend supports buffer donation
     kw = {} if jax.default_backend() == "cpu" \
-        else {"donate_argnames": ("state",)}
+        else {"donate_argnames": ("state", "fold")}
     return jax.jit(_sweep_chunk_impl,
                    static_argnames=("site", "length"), **kw)
 
 
+@functools.lru_cache(maxsize=None)
+def _scen_sharding():
+    """One ``NamedSharding`` over the scenario batch axis for all local
+    devices (cached: pjit executable reuse keys on sharding equality)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    mesh = Mesh(np.array(jax.devices()), ("scen",))
+    return NamedSharding(mesh, PartitionSpec("scen"))
+
+
+@dataclass
+class _PendingSweep:
+    """A dispatched-but-not-fetched sweep: every chunk program is
+    enqueued on device; the only host synchronization left is the fold
+    fetch in ``_finish_sweep`` (one transfer)."""
+    batch: ScenarioBatch
+    n_ticks: int
+    fold: tuple | None       # device (sum, comp) trees (fold="device")
+    acc64: dict | None       # host float64 accumulators (fold="host")
+    state: SimState          # final device state (maybe padded/sharded)
+    n_real: int              # batch rows before devices-multiple padding
+
+
+def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
+                 chunk_ticks: int = CHUNK_TICKS, fold: str = "device",
+                 shard: bool | None = None) -> _PendingSweep:
+    """Dispatch a sweep's chunk programs without fetching results.
+
+    With ``fold="device"`` (default) this returns as soon as the last
+    chunk is ENQUEUED — jax dispatch is asynchronous, so the caller can
+    trace/compile the next bucket while this one executes. The legacy
+    ``fold="host"`` path synchronizes at every chunk boundary (the
+    pre-PR-5 behaviour, kept for parity pinning).
+    """
+    global HOST_TRANSFER_COUNT
+    if fold not in ("device", "host"):
+        raise ValueError(f"fold must be 'device' or 'host', got {fold!r}")
+    hull = batch.hull
+    n_real = len(batch)
+    scen = batch.scen
+    # one fused key build for the whole batch (vectorized; the old code
+    # was an O(batch) host loop of per-seed jax.random.PRNGKey device
+    # calls), matching PRNGKey's own canonicalization in BOTH x64
+    # modes: with x64 the seed is an int64 and the key keeps the high
+    # word; without it any Python int truncates to its low 32 bits
+    # (-1 -> 4294967295, 2**32+5 -> 5; a bare uint32 cast would raise)
+    if jax.dtypes.canonicalize_dtype(np.int64) == jnp.int64:
+        seeds = jnp.asarray(batch.seeds, jnp.int64)
+    else:
+        seeds = jnp.asarray([s & 0xFFFFFFFF for s in batch.seeds],
+                            jnp.uint32)
+
+    sharding = None
+    if _should_shard(n_real, shard):
+        n_dev = jax.local_device_count()
+        sharding = _scen_sharding()
+        # pad the batch to a devices-multiple with copies of scenario 0:
+        # scenarios are independent vmap lanes, so pad rows are bit-inert
+        # for every real row and simply dropped before finalization
+        pad = (-n_real) % n_dev
+        if pad:
+            def _pad0(x):
+                return jnp.concatenate(
+                    [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
+            scen = jax.tree.map(_pad0, scen)
+            seeds = _pad0(seeds)
+
+    keys = jax.vmap(jax.random.PRNGKey)(seeds)
+    state = jax.vmap(lambda sc, k: _init_state(hull, sc, k))(scen, keys)
+
+    dev_fold = None
+    if fold == "device":
+        zeros = jax.tree.map(lambda a: jnp.zeros(a.shape, _fold_dtype()),
+                             state.acc)
+        dev_fold = (zeros, jax.tree.map(jnp.zeros_like, zeros))
+    if sharding is not None:
+        scen = jax.device_put(scen, sharding)
+        state = jax.device_put(state, sharding)
+        if dev_fold is not None:
+            dev_fold = jax.device_put(dev_fold, sharding)
+
+    runner = _sweep_runner()
+    acc64 = None
+    chunk = max(1, min(chunk_ticks, n_ticks))
+    done = 0
+    while done < n_ticks:
+        live = jnp.arange(chunk) < (n_ticks - done)
+        state, dev_fold = runner(hull, scen, state, chunk, live, dev_fold)
+        if fold == "host":
+            # legacy path: fold this chunk's accumulators into float64
+            # on the host and zero them on device — one blocking
+            # transfer per chunk
+            chunk_acc = jax.device_get(state.acc)
+            HOST_TRANSFER_COUNT += 1
+            if acc64 is None:
+                acc64 = {k: np.zeros(np.shape(v), np.float64)
+                         for k, v in chunk_acc.items()}
+            for k, v in chunk_acc.items():
+                acc64[k] += np.asarray(v, np.float64)
+            state = state._replace(
+                acc=jax.tree.map(jnp.zeros_like, state.acc))
+        done += chunk
+    return _PendingSweep(batch=batch, n_ticks=n_ticks, fold=dev_fold,
+                         acc64=acc64, state=state, n_real=n_real)
+
+
+def _finish_sweep(p: _PendingSweep, return_state: bool = False):
+    """Fetch a dispatched sweep's fold buffer (the run's single host
+    transfer on the device-fold path) and finalize per-scenario
+    metrics."""
+    global HOST_TRANSFER_COUNT
+    if p.fold is not None:
+        fsum, fcomp = jax.device_get(p.fold)
+        HOST_TRANSFER_COUNT += 1
+        # Kahan: sum carries the running total, comp the rounding error
+        # still to subtract; apply the residual in float64 on the host
+        acc64 = {k: np.asarray(fsum[k], np.float64)
+                 - np.asarray(fcomp[k], np.float64) for k in fsum}
+    else:
+        acc64 = p.acc64
+    batch = p.batch
+    res = [
+        _finalize({k: v[i] for k, v in acc64.items()}, batch.sites[i],
+                  p.n_ticks, batch.gating[i], batch.names[i],
+                  batch.labels[i])
+        for i in range(len(batch))
+    ]
+    if return_state:
+        state = jax.device_get(p.state)
+        # drop devices-multiple pad rows (copies of scenario 0)
+        state = jax.tree.map(lambda x: x[:p.n_real], state)
+        return res, state
+    return res
+
+
 def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
-              chunk_ticks: int = CHUNK_TICKS, return_state: bool = False):
+              chunk_ticks: int = CHUNK_TICKS, return_state: bool = False,
+              fold: str = "device", shard: bool | None = None):
     """Run every scenario of ``batch`` for n_ticks us in one vmapped,
     chunk-scanned program; returns one metrics dict per scenario (same
     schema as ``run_sim``, plus the scenario ``label``). With
@@ -889,55 +1114,42 @@ def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
     executable across calls; a remainder tail runs the same fixed-length
     chunk under a live-tick mask, so it never adds a trace (see module
     docstring).
+
+    ``fold="device"`` (default) keeps the accumulator fold on device
+    and performs exactly one host transfer per run; ``fold="host"`` is
+    the legacy per-chunk host fold (parity reference). ``shard=None``
+    auto-shards the scenario axis across all local devices when more
+    than one is visible; ``shard=False`` forces single-device layout.
     """
-    hull = batch.hull
-    keys = jnp.stack([jax.random.PRNGKey(s) for s in batch.seeds])
-    state = jax.vmap(lambda sc, k: _init_state(hull, sc, k))(
-        batch.scen, keys)
-
-    runner = _sweep_runner()
-
-    acc64 = None
-    chunk = max(1, min(chunk_ticks, n_ticks))
-    done = 0
-    while done < n_ticks:
-        live = jnp.arange(chunk) < (n_ticks - done)
-        state = runner(hull, batch.scen, state, chunk, live)
-        # fold this chunk's accumulators into float64 on the host and
-        # zero them on device: bounds fp32 accumulation error and keeps
-        # long runs memory-flat
-        chunk_acc = jax.device_get(state.acc)
-        if acc64 is None:
-            acc64 = {k: np.zeros(np.shape(v), np.float64)
-                     for k, v in chunk_acc.items()}
-        for k, v in chunk_acc.items():
-            acc64[k] += np.asarray(v, np.float64)
-        state = state._replace(
-            acc=jax.tree.map(jnp.zeros_like, state.acc))
-        done += chunk
-
-    res = [
-        _finalize({k: v[i] for k, v in acc64.items()}, batch.sites[i],
-                  n_ticks, batch.gating[i], batch.names[i],
-                  batch.labels[i])
-        for i in range(len(batch))
-    ]
-    if return_state:
-        return res, jax.device_get(state)
-    return res
+    return _finish_sweep(
+        _start_sweep(batch, n_ticks, chunk_ticks=chunk_ticks, fold=fold,
+                     shard=shard),
+        return_state=return_state)
 
 
 def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
                       *, max_compiles: int = 4,
                       chunk_ticks: int = CHUNK_TICKS,
-                      return_plan: bool = False):
+                      return_plan: bool = False, fold: str = "device",
+                      shard: bool | None = None, pipeline: bool = True):
     """Run a heterogeneous-site sweep through the hull-bucketing planner
     (core/planner.py): the (SimParams, seed) pairs are partitioned into
     <= ``max_compiles`` hull buckets by estimated padded cost, each
-    bucket runs as its own ``make_multi_site_batch`` + ``run_sweep``
+    bucket runs as its own ``make_multi_site_batch`` + sweep dispatch
     (one trace per (hull, batch-shape, chunk), exactly as before), and
     the per-scenario metric dicts come back in CALLER order, each
     annotated with its ``plan_bucket`` index and ``plan_hull`` tag.
+
+    With ``pipeline=True`` (default) the buckets are executed as an
+    async pipeline: every bucket's chunk programs are dispatched first,
+    in the planner's ``dispatch_order`` (largest padded cost first, so
+    tracing/compiling bucket k+1 overlaps device execution of bucket
+    k), then results are fetched — one blocking transfer per bucket,
+    after all device work is enqueued. Note the pipeline keeps every
+    bucket's state + fold buffers resident at once; ``pipeline=False``
+    runs buckets strictly serially (dispatch+fetch per bucket, caller
+    order, one bucket resident at a time — the low-memory mode for
+    accelerators) and is bit-identical: same programs, same inputs.
 
     With ``return_plan=True`` also returns the plan's padding-waste
     report (``SweepPlan.report()``: per-bucket waste fractions, the
@@ -953,11 +1165,26 @@ def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
 
     runs = list(runs)
     plan = planner.plan_sites([p.site for p, _ in runs], max_compiles)
+    order = plan.dispatch_order if pipeline \
+        else tuple(range(len(plan.buckets)))
+    pending: dict[int, _PendingSweep] = {}
+    fetched: dict[int, list] = {}
+    for k in order:
+        bucket = plan.buckets[k]
+        batch = make_multi_site_batch([runs[i] for i in bucket.indices])
+        ps = _start_sweep(batch, n_ticks, chunk_ticks=chunk_ticks,
+                          fold=fold, shard=shard)
+        if pipeline:
+            pending[k] = ps
+        else:
+            # strictly serial: block on this bucket before the next,
+            # and drop ps so its device state/fold buffers free now —
+            # this IS the advertised one-bucket-resident memory mode
+            fetched[k] = _finish_sweep(ps)
     results: list = [None] * len(runs)
     for k, bucket in enumerate(plan.buckets):
-        batch = make_multi_site_batch([runs[i] for i in bucket.indices])
-        for i, r in zip(bucket.indices,
-                        run_sweep(batch, n_ticks, chunk_ticks=chunk_ticks)):
+        res_k = fetched[k] if not pipeline else _finish_sweep(pending[k])
+        for i, r in zip(bucket.indices, res_k):
             # the FULL tag — the same format the plan report's bucket
             # "hull" field uses, so the two can be joined on it
             r["plan_bucket"] = k

@@ -118,6 +118,18 @@ def test_bimodal_waste_monotone_and_savings():
         [(0, 1, 2), (3, 4, 5)]
 
 
+def test_dispatch_order_largest_cost_first():
+    """The async pipeline dispatches the most expensive bucket first so
+    cheaper buckets' compiles overlap its execution; the order is a
+    permutation of the buckets and deterministic."""
+    plan = planner.plan_sites(BIMODAL, max_compiles=2)
+    order = plan.dispatch_order
+    assert sorted(order) == list(range(len(plan.buckets)))
+    costs = [plan.buckets[k].padded_cost for k in order]
+    assert costs == sorted(costs, reverse=True)
+    assert plan.report()["dispatch_order"] == list(order)
+
+
 def test_fingerprint_tracks_plan_not_call_order():
     sites = [SITE_A, SITE_B, SITE_A]
     a = planner.plan_sites(sites, max_compiles=2)
@@ -161,10 +173,12 @@ def test_planned_restores_caller_order_and_compiles_per_bucket(mixed_runs):
     shuffled = [mixed_runs[i] for i in (2, 0, 3, 1)]   # interleave sites
     expect_labels = S.make_multi_site_batch(shuffled).labels
 
-    n0 = S.TRACE_COUNT
+    n0, h0 = S.TRACE_COUNT, S.HOST_TRANSFER_COUNT
     res, plan = S.run_sweep_planned(shuffled, TICKS, chunk_ticks=CHUNK,
                                     max_compiles=2, return_plan=True)
     assert S.TRACE_COUNT - n0 == plan["n_buckets"] == 2
+    # async bucket pipeline: one fold fetch per bucket, nothing per chunk
+    assert S.HOST_TRANSFER_COUNT - h0 == plan["n_buckets"]
     assert [r["label"] for r in res] == list(expect_labels)
     # bucket membership: same-site scenarios share a bucket+hull tag
     assert res[0]["plan_bucket"] == res[2]["plan_bucket"]
@@ -186,3 +200,19 @@ def test_planned_restores_caller_order_and_compiles_per_bucket(mixed_runs):
         ref = by_label[r["label"]]
         for k in S.PARITY_KEYS:
             assert r[k] == ref[k], (r["label"], k)
+
+
+def test_pipelined_matches_serial_bucket_execution(mixed_runs):
+    """pipeline=False (strictly serial dispatch+fetch per bucket) is
+    bit-identical to the async pipeline: same compiled programs, same
+    inputs, only the dispatch schedule differs."""
+    piped = S.run_sweep_planned(mixed_runs, TICKS, chunk_ticks=CHUNK,
+                                max_compiles=2)
+    serial = S.run_sweep_planned(mixed_runs, TICKS, chunk_ticks=CHUNK,
+                                 max_compiles=2, pipeline=False)
+    for a, b in zip(piped, serial):
+        assert a["label"] == b["label"]
+        assert a["plan_bucket"] == b["plan_bucket"]
+        assert a["plan_hull"] == b["plan_hull"]
+        for k in S.PARITY_KEYS:
+            assert a[k] == b[k], (a["label"], k)

@@ -1,0 +1,108 @@
+"""Scenario-axis sharding (4 fake CPU devices via subprocess):
+sharded-vs-unsharded parity, devices-multiple batch padding inertness,
+the one-host-transfer contract under sharding, and the sharded planned
+(async bucket) path."""
+import json
+
+import pytest
+
+from tests._subproc import run_with_devices
+
+# one subprocess runs every check: jax startup dominates, so amortize it
+_CODE = """
+import json
+import jax
+from repro.core import simulator as S
+from repro.core.traffic import TRAFFIC_SPECS
+from repro.core.topology import FBSite
+
+assert jax.local_device_count() == 4, jax.local_device_count()
+out = {}
+
+def worst(a, b):
+    return S.worst_parity(a, b)[0]
+
+# --- B=6 (pads to 8 over 4 devices: 2 inert pad rows) ------------------
+runs = [(S.SimParams(spec=TRAFFIC_SPECS["fb_hadoop"], gating_enabled=g), s)
+        for g in (True, False) for s in (0, 1, 2)]
+batch = S.make_batch(runs)
+h0 = S.HOST_TRANSFER_COUNT
+sharded = S.run_sweep(batch, 700, chunk_ticks=300)        # auto-sharded
+out["sharded_transfers"] = S.HOST_TRANSFER_COUNT - h0
+unsharded = S.run_sweep(batch, 700, chunk_ticks=300, shard=False)
+out["pad_parity"] = worst(unsharded, sharded)
+out["n_results"] = len(sharded)
+out["labels_match"] = [r["label"] for r in sharded] == list(batch.labels)
+
+# --- B=8 (divisible: pure sharding, no padding) ------------------------
+batch8 = S.make_batch(runs + [(runs[0][0], 7), (runs[3][0], 7)])
+out["nopad_parity"] = worst(
+    S.run_sweep(batch8, 500, chunk_ticks=250, shard=False),
+    S.run_sweep(batch8, 500, chunk_ticks=250, shard=True))
+
+# --- return_state drops the pad rows -----------------------------------
+_, st = S.run_sweep(batch, 300, return_state=True)
+out["state_rows"] = int(st.rsw_q.shape[0])
+
+# --- planned async path, sharded: per-bucket contracts still hold ------
+mixed = [(S.SimParams(spec=TRAFFIC_SPECS["fb_hadoop"], site=FBSite(
+              n_clusters=2, racks_per_cluster=4, servers_per_rack=8,
+              csw_per_cluster=2, n_fc=2, csw_ring_links=4,
+              fc_ring_links=8), gating_enabled=g), s)
+         for g in (True, False) for s in (0, 1)] + \
+        [(S.SimParams(spec=TRAFFIC_SPECS["university"]), s)
+         for s in (0, 1)]
+n0, h0 = S.TRACE_COUNT, S.HOST_TRANSFER_COUNT
+planned, plan = S.run_sweep_planned(mixed, 500, chunk_ticks=200,
+                                    max_compiles=2, return_plan=True)
+out["planned_traces"] = S.TRACE_COUNT - n0
+out["planned_transfers"] = S.HOST_TRANSFER_COUNT - h0
+out["planned_buckets"] = plan["n_buckets"]
+out["planned_parity"] = worst(
+    S.run_sweep_planned(mixed, 500, chunk_ticks=200, max_compiles=2,
+                        shard=False), planned)
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def sharded_out():
+    stdout = run_with_devices(_CODE, n_devices=4)
+    line = [ln for ln in stdout.splitlines() if ln.startswith("RESULT ")]
+    assert line, stdout
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def test_sharded_matches_unsharded_with_padding(sharded_out):
+    """B=6 padded to 8 over 4 devices: every real scenario's metrics
+    match the single-device run — scenarios are independent vmap lanes,
+    so sharding + pad rows are inert (<= 1e-6; bitwise in practice)."""
+    assert sharded_out["pad_parity"] <= 1e-6
+    assert sharded_out["n_results"] == 6
+    assert sharded_out["labels_match"]
+
+
+def test_sharded_matches_unsharded_divisible(sharded_out):
+    """B=8 over 4 devices (no padding): pure layout change, same
+    metrics."""
+    assert sharded_out["nopad_parity"] <= 1e-6
+
+
+def test_sharded_run_is_one_host_transfer(sharded_out):
+    """Sharding must not reintroduce per-chunk synchronization: the
+    device fold still fetches exactly once."""
+    assert sharded_out["sharded_transfers"] == 1
+
+
+def test_sharded_return_state_drops_pad_rows(sharded_out):
+    assert sharded_out["state_rows"] == 6
+
+
+def test_sharded_planned_contracts(sharded_out):
+    """The async-pipelined planner under sharding: one trace and one
+    fold fetch per hull bucket, metrics matching the unsharded planned
+    run."""
+    assert sharded_out["planned_buckets"] == 2
+    assert sharded_out["planned_traces"] == 2
+    assert sharded_out["planned_transfers"] == 2
+    assert sharded_out["planned_parity"] <= 1e-6

@@ -1,5 +1,6 @@
-"""Batched multi-scenario sweep engine: parity with the serial path and
-the one-compile contract."""
+"""Batched multi-scenario sweep engine: parity with the serial path,
+the one-compile contract, and the device-resident accumulator fold
+(one host transfer per run, <= 1e-6 parity vs the legacy host fold)."""
 import pytest
 
 from repro.core import simulator as S
@@ -78,6 +79,70 @@ def test_chunked_matches_unchunked():
         a, b, c = whole[k], chunked[k], remainder[k]
         assert abs(a - b) <= 1e-6 * max(abs(a), abs(b), 1.0), (k, a, b)
         assert abs(a - c) <= 1e-6 * max(abs(a), abs(c), 1.0), (k, a, c)
+
+
+def test_device_fold_matches_host_fold():
+    """The device-resident Kahan fold must reproduce the legacy
+    per-chunk host-float64 fold to <= 1e-6 relative on a multi-chunk
+    run (compensation holds the cross-chunk f32 error at O(eps))."""
+    batch = S.sweep_grid(traces=("fb_hadoop",), gating=(True, False))
+    dev = S.run_sweep(batch, 1_000, chunk_ticks=250)
+    host = S.run_sweep(batch, 1_000, chunk_ticks=250, fold="host")
+    worst, worst_key = S.worst_parity(host, dev)
+    assert worst <= 1e-6, (worst, worst_key)
+
+
+def test_device_fold_is_one_host_transfer():
+    """The whole point of the device-resident fold: a multi-chunk run
+    performs exactly ONE accumulator host transfer (the final fold
+    fetch), where the host-fold path pays one per chunk."""
+    batch = S.sweep_grid(traces=("fb_web",), gating=(True, False))
+    h0 = S.HOST_TRANSFER_COUNT
+    S.run_sweep(batch, 800, chunk_ticks=200)         # 4 chunks
+    assert S.HOST_TRANSFER_COUNT - h0 == 1
+    h0 = S.HOST_TRANSFER_COUNT
+    S.run_sweep(batch, 800, chunk_ticks=200, fold="host")
+    assert S.HOST_TRANSFER_COUNT - h0 == 4
+
+
+def test_chunk_boundary_invariance():
+    """Same metrics for chunk_ticks in {1k, 10k, n_ticks} on the
+    device-fold path: where the chunk boundaries fall (and how many
+    device folds happen) must not shift results beyond accumulation
+    noise. n_ticks exceeds 10k so the three chunkings genuinely
+    differ: 12 folds + no tail, 2 folds + a masked tail, and 1 fold.
+    The tolerance is 1e-5, not the fold-parity 1e-6: the cross-chunk
+    fold is Kahan-exact, but the IN-scan f32 accumulators round
+    differently over a 12k-tick chunk than over a 1k-tick one (that
+    growth is exactly why chunking exists; observed ~1e-6)."""
+    batch = S.sweep_grid(traces=("university",), gating=(True,))
+    n_ticks = 12_000
+    res = {c: S.run_sweep(batch, n_ticks, chunk_ticks=c)[0]
+           for c in (1_000, 10_000, n_ticks)}
+    ref = res[1_000]
+    for c, r in res.items():
+        for k in PARITY_KEYS:
+            a, b = ref[k], r[k]
+            assert abs(a - b) <= 1e-5 * max(abs(a), abs(b), 1.0), \
+                (c, k, a, b)
+
+
+def test_seed_key_build_accepts_any_int():
+    """The vectorized key build must keep PRNGKey's own seed
+    canonicalization: any Python int truncates to its low 32 bits, so
+    negative / 64-bit seeds neither crash nor change stream."""
+    p = S.SimParams(spec=TRAFFIC_SPECS["fb_hadoop"])
+    a = S.run_sweep(S.make_batch([(p, -1), (p, 2**32 + 5)]), 300)
+    b = S.run_sweep(S.make_batch([(p, 2**32 - 1), (p, 5)]), 300)
+    for ra, rb in zip(a, b):
+        assert ra["injected_pkts"] == rb["injected_pkts"]
+        assert ra["delivered_pkts"] == rb["delivered_pkts"]
+
+
+def test_fold_rejects_unknown_mode():
+    batch = S.sweep_grid(traces=("fb_hadoop",), gating=(True,))
+    with pytest.raises(ValueError, match="fold"):
+        S.run_sweep(batch, 100, fold="gpu")
 
 
 def test_rate_scale_is_a_batch_axis():
