@@ -1,0 +1,130 @@
+"""Shared perf/parity baseline machinery for the benchmark gates.
+
+One committed baseline file (benchmarks/baselines.json) holds a SECTION
+per benchmark::
+
+    {"schema": 2,
+     "bench_sweep":  {"mode": "smoke", "values": {...}, "bands": {...}},
+     "bench_faults": {"mode": "smoke", "values": {...}, "bands": {...}}}
+
+so each gate (`bench_sweep`, `bench_faults`, ...) blesses and checks its
+own values without clobbering the others. Schema-1 files (the pre-PR-6
+flat layout, which only ever held bench_sweep's values) are read
+transparently as a lone ``bench_sweep`` section and upgraded in place on
+the next bless.
+
+Band types (per metric, any combination):
+
+  max_abs / min_abs          machine-independent hard bounds
+  max_frac_of_baseline /     generous ratios to the blessed value
+  min_frac_of_baseline       (CI-noise tolerant; catch order-of-magnitude
+                             regressions, not 10% jitter)
+  equal                      exact match against the blessed value
+
+A blessed-relative band whose blessed value is missing fails loudly —
+a renamed metric or hand-edit must not silently disable a gate.
+
+The perf-trajectory record (``BENCH_<n>.json`` at the repo root, n = the
+PR index derived from CHANGES.md) is shared too: each gate merges its
+record under its own key, so one PR's record carries every benchmark
+that ran.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+BASELINE = Path(__file__).resolve().with_name("baselines.json")
+CHANGES = Path(__file__).resolve().parents[1] / "CHANGES.md"
+
+
+def pr_index() -> int:
+    """The current PR number, derived from CHANGES.md (one `- PR n:`
+    line per landed PR) — keeps the BENCH_<n>.json trajectory record
+    self-labeling so future PRs append to the trajectory instead of
+    overwriting this one's record with a stale label."""
+    try:
+        return sum(1 for ln in CHANGES.read_text().splitlines()
+                   if ln.startswith("- PR"))
+    except OSError:
+        return 0
+
+
+def trajectory_path() -> Path:
+    return CHANGES.with_name(f"BENCH_{pr_index()}.json")
+
+
+def merge_trajectory(bench: str, record: dict) -> Path:
+    """Merge one benchmark's record into this PR's BENCH_<n>.json under
+    its own key (written even on gate failure: the trajectory should
+    record regressions, not hide them)."""
+    path = trajectory_path()
+    data = {}
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except ValueError:
+            data = {}
+    data["pr"] = pr_index()
+    data[bench] = record
+    path.write_text(json.dumps(data, indent=1) + "\n")
+    return path
+
+
+def _load_all() -> dict:
+    """The baseline file as schema-2 sections (schema-1 flat files are
+    presented as a lone bench_sweep section)."""
+    if not BASELINE.exists():
+        return {"schema": 2}
+    data = json.loads(BASELINE.read_text())
+    if data.get("schema") == 1:
+        return {"schema": 2,
+                "bench_sweep": {k: data[k] for k in
+                                ("mode", "values", "bands") if k in data}}
+    return data
+
+
+def load_section(bench: str) -> dict | None:
+    return _load_all().get(bench)
+
+
+def bless_section(bench: str, mode: str, values: dict,
+                  bands: dict) -> None:
+    """Write one benchmark's blessed values/bands, preserving every
+    other section (and upgrading schema-1 files in place)."""
+    data = _load_all()
+    data["schema"] = 2
+    data[bench] = {"mode": mode, "values": values, "bands": bands}
+    BASELINE.write_text(json.dumps(data, indent=1) + "\n")
+
+
+def check_bands(current: dict, section: dict) -> list:
+    """Compare a run against a blessed section; returns failures."""
+    fails = []
+    for key, bands in section["bands"].items():
+        if key not in current:
+            fails.append(f"{key}: missing from current run")
+            continue
+        cur = current[key]
+        base = section["values"].get(key)
+        for btype, bval in bands.items():
+            if btype == "max_abs":
+                ok, want = cur <= bval, f"<= {bval:g}"
+            elif btype == "min_abs":
+                ok, want = cur >= bval, f">= {bval:g}"
+            elif btype == "min_frac_of_baseline":
+                ok = base is not None and cur >= base * bval
+                want = f">= {bval:g} x blessed {base}"
+            elif btype == "max_frac_of_baseline":
+                ok = base is not None and cur <= base * bval
+                want = f"<= {bval:g} x blessed {base}"
+            elif btype == "equal":
+                ok = base is not None and cur == base
+                want = f"== blessed {base}"
+            else:
+                ok, want = False, f"unknown band type {btype!r}"
+            status = "PASS" if ok else "FAIL"
+            print(f"  [{status}] {key} = {cur} (want {want})")
+            if not ok:
+                fails.append(f"{key}={cur} violates {btype} ({want})")
+    return fails

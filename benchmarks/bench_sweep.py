@@ -27,18 +27,20 @@ baseline (benchmarks/baselines.json) under ``--check-baseline``:
    single-hull results. The bucketing report is also written to
    results/bench_planner_report.json (a CI build artifact).
 
-Under ``--check-baseline`` the run additionally emits a
-machine-readable perf-trajectory record at the repo root
-(``BENCH_<n>.json``, n = the PR index derived from CHANGES.md;
-speedups, parity, bucket + host-transfer stats, execution mode, gate
-outcome) so future PRs have a bench trajectory to compare against.
+Under ``--check-baseline`` the run additionally merges a
+machine-readable perf-trajectory record into the repo root's
+``BENCH_<n>.json`` (n = the PR index derived from CHANGES.md; speedups,
+parity, bucket + host-transfer stats, execution mode, gate outcome —
+under the ``bench_sweep`` key, alongside other benchmarks' records) so
+future PRs have a bench trajectory to compare against.
 
   PYTHONPATH=src python -m benchmarks.bench_sweep            # full grid
   PYTHONPATH=src python -m benchmarks.bench_sweep --smoke    # <1 min canary
   PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --check-baseline
   PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --update-baseline
 
---check-baseline compares the run against benchmarks/baselines.json and
+--check-baseline compares the run against this bench's SECTION of
+benchmarks/baselines.json (shared machinery: baseline_gate.py) and
 exits nonzero on any violated band: parity/savings/bucket-count gates
 are machine-independent hard bounds, timing gates are generous ratios
 to the blessed values (CI runners are noisy — the bands catch
@@ -54,6 +56,7 @@ import json
 import time
 from pathlib import Path
 
+from benchmarks import baseline_gate as BG
 from repro.core import simulator as S
 from repro.core.simulator import (SimParams, grid_runs, make_batch,
                                   make_multi_site_batch, run_sim,
@@ -65,26 +68,6 @@ from repro.core.traffic import TRAFFIC_SPECS
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 OUT = RESULTS / "bench_sweep.json"
 PLAN_OUT = RESULTS / "bench_planner_report.json"
-BASELINE = Path(__file__).resolve().with_name("baselines.json")
-CHANGES = Path(__file__).resolve().parents[1] / "CHANGES.md"
-
-
-def _pr_index() -> int:
-    """The current PR number, derived from CHANGES.md (one `- PR n:`
-    line per landed PR) — keeps the BENCH_<n>.json trajectory record
-    self-labeling so future PRs append to the trajectory instead of
-    overwriting this one's record with a stale label."""
-    try:
-        return sum(1 for ln in CHANGES.read_text().splitlines()
-                   if ln.startswith("- PR"))
-    except OSError:
-        return 0
-
-
-def _trajectory_path() -> Path:
-    """The machine-readable perf-trajectory record (repo root), emitted
-    by --check-baseline runs: PR-over-PR speedup/parity/bucket stats."""
-    return CHANGES.with_name(f"BENCH_{_pr_index()}.json")
 
 # the acceptance-criteria mix: 3 small + 3 large fabrics whose shared
 # hull would waste most of the compute on padding the small ones
@@ -319,41 +302,6 @@ def bench_planner(args) -> dict:
     }
 
 
-def check_baseline(current: dict, baseline: dict) -> list:
-    """Compare a run against the blessed baseline; returns failures."""
-    fails = []
-    for key, bands in baseline["bands"].items():
-        if key not in current:
-            fails.append(f"{key}: missing from current run")
-            continue
-        cur = current[key]
-        base = baseline["values"].get(key)
-        for btype, bval in bands.items():
-            # a blessed-relative band without a blessed value is a
-            # broken baseline (renamed metric, hand-edit): FAIL loudly
-            # rather than silently disabling the gate
-            if btype == "max_abs":
-                ok, want = cur <= bval, f"<= {bval:g}"
-            elif btype == "min_abs":
-                ok, want = cur >= bval, f">= {bval:g}"
-            elif btype == "min_frac_of_baseline":
-                ok = base is not None and cur >= base * bval
-                want = f">= {bval:g} x blessed {base}"
-            elif btype == "max_frac_of_baseline":
-                ok = base is not None and cur <= base * bval
-                want = f"<= {bval:g} x blessed {base}"
-            elif btype == "equal":
-                ok = base is not None and cur == base
-                want = f"== blessed {base}"
-            else:
-                ok, want = False, f"unknown band type {btype!r}"
-            status = "PASS" if ok else "FAIL"
-            print(f"  [{status}] {key} = {cur} (want {want})")
-            if not ok:
-                fails.append(f"{key}={cur} violates {btype} ({want})")
-    return fails
-
-
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ticks", type=int, default=None)
@@ -388,40 +336,36 @@ def main() -> None:
                              "failed its parity checks (max_rel_diff / "
                              "planner_max_rel_diff above --tol)")
         bands = DEFAULT_BANDS
-        if BASELINE.exists():
-            prev = json.loads(BASELINE.read_text())
-            if prev.get("mode") == mode:
-                # keep hand-tuned bands for metrics that already had
-                # one, but pick up newly introduced default bands too
-                # (a re-bless must not silently drop a new gate)
-                bands = {**DEFAULT_BANDS, **prev.get("bands", {})}
+        prev = BG.load_section("bench_sweep")
+        if prev is not None and prev.get("mode") == mode:
+            # keep hand-tuned bands for metrics that already had
+            # one, but pick up newly introduced default bands too
+            # (a re-bless must not silently drop a new gate)
+            bands = {**DEFAULT_BANDS, **prev.get("bands", {})}
         missing = [k for k in bands if k not in results]
         if missing:
             raise SystemExit("refusing to bless baseline: banded "
                              f"metrics missing from this run: {missing}")
-        BASELINE.write_text(json.dumps({
-            "schema": 1, "mode": mode,
-            "values": {k: results[k] for k in bands},
-            "bands": bands,
-        }, indent=1) + "\n")
-        print(f"baseline blessed: {BASELINE}")
+        BG.bless_section("bench_sweep", mode,
+                         {k: results[k] for k in bands}, bands)
+        print(f"baseline blessed: {BG.BASELINE}")
 
     if args.check_baseline:
-        if not BASELINE.exists():
-            raise SystemExit(f"no baseline at {BASELINE}; bless one with "
-                             "--update-baseline and commit it")
-        baseline = json.loads(BASELINE.read_text())
+        baseline = BG.load_section("bench_sweep")
+        if baseline is None:
+            raise SystemExit(f"no bench_sweep baseline at {BG.BASELINE}; "
+                             "bless one with --update-baseline and "
+                             "commit it")
         if baseline.get("mode") != mode:
             raise SystemExit(
                 f"baseline was blessed in {baseline.get('mode')!r} mode "
                 f"but this run is {mode!r}; re-bless or match modes")
-        print(f"\nbaseline gate ({BASELINE.name}, mode={mode}):")
-        fails = check_baseline(results, baseline)
+        print(f"\nbaseline gate ({BG.BASELINE.name}, mode={mode}):")
+        fails = BG.check_bands(results, baseline)
         # the perf-trajectory record: written even on gate failure (the
         # trajectory should record regressions, not hide them)
-        trajectory = _trajectory_path()
-        trajectory.write_text(json.dumps({
-            "pr": _pr_index(), "bench": "bench_sweep", "mode": mode,
+        record = {
+            "mode": mode,
             "gate": "failed" if fails else "passed",
             "exec": results["exec"],
             "speedups": {
@@ -452,7 +396,8 @@ def main() -> None:
                 "planned": results["t_planned_s"],
                 "single_hull": results["t_single_hull_s"],
             },
-        }, indent=1) + "\n")
+        }
+        trajectory = BG.merge_trajectory("bench_sweep", record)
         print(f"trajectory record written: {trajectory}")
         if fails:
             raise SystemExit("baseline gate FAILED:\n  "

@@ -41,6 +41,18 @@ DELAY_HIST_BINS = 48
 DELAY_HIST_MIN_US = 4.0          # just under the 5.75 us stack+wire floor
 DELAY_HIST_BINS_PER_OCTAVE = 6   # ~12% resolution per bin, range ~900 us
 
+# --- optical fault model (beyond-paper robustness axis) -------------------
+# Real optical DCN components are not the paper's perfect plane: wakes
+# jitter and transiently fail (PULSE-class timing margins; the Xue et al.
+# 2023 optical-switching survey catalogs transceiver reliability). A
+# failed stage-up retries after a bounded backoff on top of the re-drawn
+# turn-on delay, so a flapping laser cannot hot-loop the controller.
+WAKE_RETRY_BACKOFF_TICKS = 4
+# conservation tolerance of the opt-in in-program validate guard
+# (relative |injected - (delivered + in-flight + drops + fault-drops)|);
+# matches the cross-path parity tolerance the test suite pins
+VALIDATE_CONS_REL_TOL = 1e-3
+
 # --- watermarks (Sec V) ---------------------------------------------------
 QUEUE_CAP_PKTS = 20        # output queue capacity (pkts)
 HI_WATERMARK = 0.75        # stage-up threshold (75% buffer utilization)

@@ -183,6 +183,9 @@ from repro.core.traffic import (TRAFFIC_SPECS, TrafficSpec,
 from repro.kernels import ops
 
 F_SLOTS = 64              # concurrent flow slots per rack
+MAX_FAULT_LINKS = 16      # fixed per-switch fault-draw width: hull link
+#                           axes must fit so the uniform block's shape
+#                           (and thus every draw) is padding-invariant
 NODE_IDLE_TICKS = 50      # server-link idle timeout (us)
 # ring migration budgets are per-site (1 pkt/tick per 10G ring link):
 # scen.csw_ring / scen.fc_ring, from FBSite.csw_ring_links/fc_ring_links
@@ -197,8 +200,12 @@ CHUNK_TICKS = 10_000      # default scan chunk (accumulator fold period)
 #: half-open on_frac_hist buckets; v4: hull-bucketed planned sweeps —
 #: results carry plan_bucket/plan_hull, caches carry the plan
 #: fingerprint; v5: device-resident accumulator fold + scenario-axis
-#: sharding — caches additionally carry the execution mode)
-SIM_SCHEMA_VERSION = 5
+#: sharding — caches additionally carry the execution mode; v6: optical
+#: fault-injection subsystem — fault knobs are Scenario leaves, results
+#: gain delivered/fault-drop/retry/connectivity metrics, and cache meta
+#: carries the fault fingerprint + validate flag so fault-free cached
+#: results never alias faulted runs)
+SIM_SCHEMA_VERSION = 6
 
 #: number of times the sweep step has been traced (the one-compile probe)
 TRACE_COUNT = 0
@@ -218,7 +225,8 @@ PARITY_KEYS = (
     "switch_energy_savings_frac", "rsw_link_on_frac", "csw_link_on_frac",
     "node_link_on_frac", "transceiver_power_w", "half_off_frac",
     "delay_p50_us", "delay_p99_us", "delay_queue_us",
-    "delay_wake_stall_us",
+    "delay_wake_stall_us", "delivered_frac", "fault_drop_frac",
+    "delay_fault_stall_us",
 )
 
 
@@ -301,6 +309,13 @@ class Scenario(NamedTuple):
     hi: jax.Array               # f32
     lo: jax.Array               # f32
     dwell: jax.Array            # int32
+    # optical fault model (all zero => bit-identical to the fault-free
+    # path; sweepable with zero new compile sites)
+    wake_fail_prob: jax.Array   # f32 P(stage-up firing fails)
+    wake_jitter_frac: jax.Array  # f32 turn-on delay jitter (+- fraction)
+    fault_prob: jax.Array       # f32 per-tick hard-fault hazard (1/MTBF)
+    repair_ticks: jax.Array     # int32 hard-fault repair delay
+    fault_fallback: jax.Array   # bool min-connectivity force-wake on/off
     # site shape (real dims; <= the hull's static dims)
     ncl: jax.Array              # int32 n_clusters
     rpc: jax.Array              # int32 racks_per_cluster
@@ -323,8 +338,15 @@ class SimState(NamedTuple):
     fc_down_q: jax.Array       # (NF, NC) float
     rsw_gate: gating.GateState
     csw_gate: gating.GateState
+    rsw_fault: gating.FaultState   # per-uplink hard-fault carries
+    csw_fault: gating.FaultState
     node_on: jax.Array         # (R,) float servers-links held on
     acc: dict                  # accumulators
+
+
+#: SimParams fields forming the fault model's cache/meta fingerprint
+FAULT_KNOBS = ("wake_fail_prob", "wake_jitter_frac", "link_mtbf_ticks",
+               "repair_ticks", "fault_fallback")
 
 
 @dataclass(frozen=True)
@@ -337,6 +359,61 @@ class SimParams:
     hi: float = C.HI_WATERMARK
     lo: float = C.LO_WATERMARK
     dwell: int = C.STAGE_DWELL_TICKS
+    # optical fault model (defaults = the paper's perfect plane)
+    wake_fail_prob: float = 0.0    # P(a stage-up firing fails), [0, 1)
+    wake_jitter_frac: float = 0.0  # turn-on delay jitter fraction [0, 1]
+    link_mtbf_ticks: float = 0.0   # mean ticks between hard faults per
+    #                                powered link; 0 disables hard faults
+    repair_ticks: int = 0          # hard-fault repair delay (>= 1 when
+    #                                link_mtbf_ticks > 0)
+    fault_fallback: bool = True    # min-connectivity force-wake
+
+    def __post_init__(self):
+        """Reject out-of-range knobs with a clear error instead of
+        silent NaN/garbage downstream (satellite of the fault PR)."""
+        def bad(msg):
+            raise ValueError(f"SimParams: {msg}")
+        if not self.rate_scale >= 0.0:
+            bad(f"rate_scale must be >= 0, got {self.rate_scale}")
+        if not self.queue_cap > 0.0:
+            bad(f"queue_cap must be > 0, got {self.queue_cap}")
+        if not 0.0 < self.hi <= 1.0:
+            bad(f"hi watermark must be in (0, 1], got {self.hi}")
+        if not self.lo >= 0.0:
+            bad(f"lo watermark must be >= 0, got {self.lo}")
+        if self.lo >= self.hi:
+            bad(f"inverted watermarks: lo ({self.lo}) >= hi ({self.hi})")
+        if self.dwell < 0:
+            bad(f"dwell must be >= 0, got {self.dwell}")
+        if not 0.0 <= self.wake_fail_prob < 1.0:
+            bad("wake_fail_prob must be in [0, 1), got "
+                f"{self.wake_fail_prob}")
+        if not 0.0 <= self.wake_jitter_frac <= 1.0:
+            bad("wake_jitter_frac must be in [0, 1], got "
+                f"{self.wake_jitter_frac}")
+        if self.link_mtbf_ticks < 0.0:
+            bad(f"link_mtbf_ticks must be >= 0 (0 disables hard "
+                f"faults), got {self.link_mtbf_ticks}")
+        if 0.0 < self.link_mtbf_ticks < 1.0:
+            bad(f"link_mtbf_ticks must be >= 1 tick when nonzero, got "
+                f"{self.link_mtbf_ticks}")
+        if self.repair_ticks < 0:
+            bad(f"repair_ticks must be >= 0, got {self.repair_ticks}")
+        if self.link_mtbf_ticks > 0.0 and self.repair_ticks < 1:
+            bad("repair_ticks must be >= 1 when hard faults are "
+                f"enabled (link_mtbf_ticks={self.link_mtbf_ticks})")
+
+
+def fault_fingerprint(p: "SimParams | None" = None) -> dict:
+    """The fault-knob dict joined into result-cache keys / metadata
+    (benchmarks/simcache.py) so fault-free cached results never alias
+    faulted runs. With no argument, returns the defaults (the perfect
+    optical plane)."""
+    if p is None:
+        import dataclasses
+        return {f.name: f.default for f in dataclasses.fields(SimParams)
+                if f.name in FAULT_KNOBS}
+    return {k: getattr(p, k) for k in FAULT_KNOBS}
 
 
 @dataclass(frozen=True)
@@ -363,6 +440,15 @@ class ScenarioBatch:
 # the old private names stay as aliases for existing callers
 _pad_hull = pad_hull
 _site_tag = site_tag
+
+
+def _run_label(p: SimParams, seed: int, *, tag_site: bool) -> str:
+    """THE scenario label format — shared by batch construction and the
+    planned executor's structured error entries, so a failed bucket's
+    placeholders carry the same label its metrics dict would have."""
+    return (f"{p.spec.name}|{'lcdc' if p.gating_enabled else 'base'}"
+            f"|x{p.rate_scale:g}|s{seed}"
+            + (f"|{_site_tag(p.site)}" if tag_site else ""))
 
 
 def _build_batch(runs: Sequence[tuple[SimParams, int]],
@@ -397,6 +483,15 @@ def _build_batch(runs: Sequence[tuple[SimParams, int]],
         queue_cap=f32([p.queue_cap for p in params]),
         hi=f32([p.hi for p in params]), lo=f32([p.lo for p in params]),
         dwell=jnp.asarray([p.dwell for p in params], jnp.int32),
+        wake_fail_prob=f32([p.wake_fail_prob for p in params]),
+        wake_jitter_frac=f32([p.wake_jitter_frac for p in params]),
+        # per-tick hazard: 1/MTBF (0 disables hard faults)
+        fault_prob=f32([1.0 / p.link_mtbf_ticks
+                        if p.link_mtbf_ticks > 0 else 0.0
+                        for p in params]),
+        repair_ticks=i32([p.repair_ticks for p in params]),
+        fault_fallback=jnp.asarray([p.fault_fallback for p in params],
+                                   bool),
         ncl=i32([p.site.n_clusters for p in params]),
         rpc=i32([p.site.racks_per_cluster for p in params]),
         cpc=i32([p.site.csw_per_cluster for p in params]),
@@ -405,11 +500,8 @@ def _build_batch(runs: Sequence[tuple[SimParams, int]],
         # 1 pkt/tick per 10G ring link
         csw_ring=f32([p.site.csw_ring_links for p in params]),
         fc_ring=f32([p.site.fc_ring_links for p in params]))
-    labels = tuple(
-        f"{p.spec.name}|{'lcdc' if p.gating_enabled else 'base'}"
-        f"|x{p.rate_scale:g}|s{seed}"
-        + (f"|{_site_tag(p.site)}" if tag_sites else "")
-        for p, seed in runs)
+    labels = tuple(_run_label(p, seed, tag_site=tag_sites)
+                   for p, seed in runs)
     return ScenarioBatch(
         scen=scen, hull=_pad_hull(sites), sites=sites,
         names=tuple(p.spec.name for p, _ in runs), labels=labels,
@@ -526,6 +618,16 @@ def _init_state(hull: FBSite, scen: Scenario, key) -> SimState:
         "delay_queue_sum": jnp.zeros(()),  # queue-wait part of delay_sum
         "delay_stall_sum": jnp.zeros(()),  # wake-stall part of delay_sum
         "wake_stall_pkts": jnp.zeros(()),  # packets arriving mid stage-up
+        # optical fault model (all exactly 0 with zero fault knobs)
+        "fault_drops": jnp.zeros(()),      # pkts lost to dying links
+        "delay_fault_sum": jnp.zeros(()),  # fault_stall part of delay_sum
+        "fault_stall_pkts": jnp.zeros(()),  # pkts arriving mid force-wake
+        "wake_retries": jnp.zeros(()),     # failed stage-up firings
+        "forced_wakes": jnp.zeros(()),     # min-connectivity fallbacks
+        "fault_link_ticks": jnp.zeros(()),  # hard-faulted link-ticks
+        "conn_loss_rack_ticks": jnp.zeros(()),   # valid RSWs with a
+        "conn_loss_csw_ticks": jnp.zeros(()),    # healthy-but-unusable
+        #                                          uplink set (ticks)
         # post-serve occupancy moments from the switch kernel
         "rsw_occ_m1": jnp.zeros(()), "rsw_occ_m2": jnp.zeros(()),
         "csw_occ_m1": jnp.zeros(()), "csw_occ_m2": jnp.zeros(()),
@@ -542,6 +644,8 @@ def _init_state(hull: FBSite, scen: Scenario, key) -> SimState:
         fc_down_q=jnp.zeros((NF, NC)),
         rsw_gate=tier_gate(R, P, rsw_max),
         csw_gate=tier_gate(NC, s.csw_uplinks, csw_max),
+        rsw_fault=gating.fault_init(R, P),
+        csw_fault=gating.fault_init(NC, s.csw_uplinks),
         node_on=jnp.zeros((R,)),
         acc=acc,
     )
@@ -610,6 +714,9 @@ def make_sim_step(hull: FBSite):
     NF = s.n_fc
     CUP = s.csw_uplinks       # == NF (FBSite invariant: uplink f -> FC f)
     R, NC = s.n_racks, s.n_csw
+    assert P <= MAX_FAULT_LINKS and CUP <= MAX_FAULT_LINKS, \
+        f"hull link axes ({P}, {CUP}) exceed the fixed fault-draw " \
+        f"width MAX_FAULT_LINKS={MAX_FAULT_LINKS}"
 
     def step(scen: Scenario, state: SimState) -> SimState:
         acc = dict(state.acc)
@@ -618,6 +725,35 @@ def make_sim_step(hull: FBSite):
         rpcf = scen.rpc.astype(jnp.float32)
         nclf = scen.ncl.astype(jnp.float32)
         key, k_u, k_z = jax.random.split(state.key, 3)
+
+        # fault-model randomness: dedicated fold_in branches of the tick
+        # key (constants far above any logical switch id) so the
+        # existing traffic streams are bit-untouched, then one
+        # FIXED-width uniform block per switch keyed by its LOGICAL id —
+        # identical draws whether a site runs at exact dims or padded
+        # inside a heterogeneous hull. Layout: [0]=wake jitter,
+        # [1]=wake-failure, [2+l]=hard-fault hazard of link l.
+        k_fr = jax.random.fold_in(k_u, 0x7F000001)
+        k_fc = jax.random.fold_in(k_u, 0x7F000002)
+        csw_uid = ((jnp.arange(NC) // P) * scen.cpc
+                   + jnp.arange(NC) % P).astype(jnp.int32)
+
+        def fault_draws(base, uids):
+            ks = jax.vmap(lambda i: jax.random.fold_in(base, i))(uids)
+            return jax.vmap(
+                lambda k: jax.random.uniform(k, (2 + MAX_FAULT_LINKS,))
+            )(ks)
+
+        u_fr = fault_draws(k_fr, rack_uid)                  # (R, 2+16)
+        u_fc = fault_draws(k_fc, csw_uid)                   # (NC, 2+16)
+        rsw_ok = state.rsw_fault.timer == 0                 # (R, P)
+        csw_ok = state.csw_fault.timer == 0                 # (NC, CUP)
+        link_idx_p = jnp.arange(P)[None, :]
+        link_idx_c = jnp.arange(CUP)[None, :]
+        rsw_link_real = rack_valid[:, None] & (link_idx_p
+                                               < rsw_max[:, None])
+        csw_link_real = csw_valid[:, None] & (link_idx_c
+                                              < csw_max[:, None])
 
         # 1. traffic edge ------------------------------------------------
         burst_on, flow_rem, flow_dest, flow_fast, pace_u = _spawn_flows(
@@ -643,10 +779,12 @@ def make_sim_step(hull: FBSite):
         # 2+3. RSW datapath tick: min-backlog enqueue of the [intra,
         # inter] arrival split + 1 pkt/tick serve per active uplink —
         # the shared switch-step kernel (Pallas on TPU, ref on CPU).
+        # The valid mask is per-LINK: hull padding AND hard-faulted
+        # transceivers (a dead port neither accepts nor serves).
         (rsw_q, served_split, _, _, rsw_drop, rsw_wait, rsw_m1,
          rsw_m2) = ops.switch_step(
             state.rsw_q, state.rsw_gate.stage, by_dest[:, 1:],
-            state.rsw_gate.draining, valid=rack_valid,
+            state.rsw_gate.draining, valid=rack_valid[:, None] & rsw_ok,
             cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, serve_rate=1.0)
         acc["drops"] += jnp.sum(rsw_drop)
         acc["rsw_backlog"] += jnp.sum(rsw_q) + jnp.sum(served_split)
@@ -689,7 +827,7 @@ def make_sim_step(hull: FBSite):
         (csw_up_q, cserve, _, _, csw_drop, csw_wait, csw_m1,
          csw_m2) = ops.switch_step(
             state.csw_up_q, state.csw_gate.stage, inter_in,
-            state.csw_gate.draining, valid=csw_valid,
+            state.csw_gate.draining, valid=csw_valid[:, None] & csw_ok,
             cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, serve_rate=4.0)
         acc["drops"] += jnp.sum(csw_drop)
         acc["csw_up_backlog"] += jnp.sum(state.csw_up_q)
@@ -715,11 +853,12 @@ def make_sim_step(hull: FBSite):
         fc_down_add = down_cl * csw_share[None, :] * fc_w.T      # (NF,NC)
         fc_down_q = state.fc_down_q + fc_down_add
 
-        # 6. FC down serve: link (f,c) active iff csw stage[c] > f; any
-        #    residual on an inactive plane (stage just dropped) rides the
+        # 6. FC down serve: link (f,c) active iff csw stage[c] > f AND
+        #    csw c's uplink-f transceiver is healthy (it is the same
+        #    fiber); any residual on an inactive/dead plane rides the
         #    FC ring to the always-on f=0 plane.
         fc_active = (jnp.arange(NF)[:, None]
-                     < state.csw_gate.stage[None, :])            # (NF,NC)
+                     < state.csw_gate.stage[None, :]) & csw_ok.T  # (NF,NC)
         fserve = jnp.minimum(fc_down_q, 4.0) * fc_active
         fc_down_q = fc_down_q - fserve
         stranded = jnp.where(~fc_active, fc_down_q, 0.0)
@@ -754,12 +893,15 @@ def make_sim_step(hull: FBSite):
                       .reshape(NC, RPC))
         acc["ring_pkts"] += jnp.sum(orphan_cl)
 
-        # 7. CSW down serve: link (r, c) active iff rsw stage[r] > c —
+        # 7. CSW down serve: link (r, c) active iff rsw stage[r] > c AND
+        #    rack r's uplink-c transceiver is healthy (same fiber) —
         #    the plane axis is csw_per_cluster; stranded traffic rides
         #    the cluster ring to c=0.
         rsw_stage = state.rsw_gate.stage.reshape(NCL, RPC)
+        rsw_ok_pl = rsw_ok.reshape(NCL, RPC, P) \
+            .transpose(0, 2, 1)                                  # (NCL,P,RPC)
         cidx = jnp.arange(P)[None, :, None]                      # plane pos
-        down_act = (cidx < rsw_stage[:, None, :])                # (NCL,P,RPC)
+        down_act = (cidx < rsw_stage[:, None, :]) & rsw_ok_pl    # (NCL,P,RPC)
         dq = csw_down_q.reshape(NCL, P, RPC)
         dserve = jnp.minimum(dq, 1.0) * down_act
         dq = dq - dserve
@@ -816,6 +958,14 @@ def make_sim_step(hull: FBSite):
         stall_csw = jnp.where(g_on, gating.wake_stall_ticks(
             state.csw_gate), 0.0)                                # (NC,)
         stall_csw_cl = cl_avg(stall_csw)
+        # fault-forced wake stalls (min-connectivity fallback): the
+        # third attribution bin; the fallback only engages under
+        # gating, and the mask keeps it EXACTLY 0 when gating is off
+        fstall_rsw = jnp.where(g_on, gating.fault_stall_ticks(
+            state.rsw_fault), 0.0)                               # (R,)
+        fstall_csw = jnp.where(g_on, gating.fault_stall_ticks(
+            state.csw_fault), 0.0)                               # (NC,)
+        fstall_csw_cl = cl_avg(fstall_csw)
 
         def per_rack(x_cl):                                      # (NCL,)->(R,)
             return jnp.broadcast_to(x_cl[:, None], (NCL, RPC)).reshape(R)
@@ -825,9 +975,11 @@ def make_sim_step(hull: FBSite):
         q_x = q_i + per_rack(w_csw_cl) + fc_wait
         s_i = stall_rsw                                # wake-stall parts
         s_x = stall_rsw + per_rack(stall_csw_cl)
+        f_i = fstall_rsw                               # fault-stall parts
+        f_x = fstall_rsw + per_rack(fstall_csw_cl)
         base_i = STACK_US + 4.0 * WIRE_HOP_US
-        d_i = base_i + q_i + s_i
-        d_x = base_i + 2.0 * WIRE_HOP_US + q_x + s_x
+        d_i = base_i + q_i + s_i + f_i
+        d_x = base_i + 2.0 * WIRE_HOP_US + q_x + s_x + f_x
         hist = _delay_hist_add(acc["delay_hist"], d_i, wt_i)
         acc["delay_hist"] = _delay_hist_add(hist, d_x, wt_x)
         acc["delay_sum"] += jnp.sum(wt_i * d_i) + jnp.sum(wt_x * d_x)
@@ -835,8 +987,11 @@ def make_sim_step(hull: FBSite):
         acc["delay_wt_inter"] += jnp.sum(wt_x)
         acc["delay_queue_sum"] += jnp.sum(wt_i * q_i) + jnp.sum(wt_x * q_x)
         acc["delay_stall_sum"] += jnp.sum(wt_i * s_i) + jnp.sum(wt_x * s_x)
+        acc["delay_fault_sum"] += jnp.sum(wt_i * f_i) + jnp.sum(wt_x * f_x)
         acc["wake_stall_pkts"] += jnp.sum(wt_i * (s_i > 0)) \
             + jnp.sum(wt_x * (s_x > 0))
+        acc["fault_stall_pkts"] += jnp.sum(wt_i * (f_i > 0)) \
+            + jnp.sum(wt_x * (f_x > 0))
 
         # 9. watermark controllers. Per Sec III-B the backlog monitor
         # watches ALL output queues of a switch: the RSW trigger combines
@@ -848,14 +1003,52 @@ def make_sim_step(hull: FBSite):
         # result is selected, so LC/DC and always-on scenarios share one
         # compiled program. max_stage caps each switch at its REAL link
         # count (padded hull links never activate).
-        rsw_gated = gating.gate_step(
+        #
+        # 9a. hard-fault evolution FIRST (applies to LC/DC and always-on
+        # scenarios alike: transceivers die regardless of the
+        # controller): Bernoulli arrivals on powered healthy real links,
+        # repair countdown, and the dying link's queued packets move to
+        # the fault-drop conservation bin (a dead laser transmits
+        # nothing; injected == delivered + in-flight + drops +
+        # fault_drops stays exact).
+        rsw_timer, rsw_new_f = gating.fault_arrivals(
+            state.rsw_fault.timer, u_fr[:, 2:2 + P],
+            state.rsw_gate.powered, rsw_link_real,
+            scen.fault_prob, scen.repair_ticks)
+        csw_timer, csw_new_f = gating.fault_arrivals(
+            state.csw_fault.timer, u_fc[:, 2:2 + CUP],
+            state.csw_gate.powered, csw_link_real,
+            scen.fault_prob, scen.repair_ticks)
+        acc["fault_drops"] += \
+            jnp.sum(jnp.where(rsw_new_f[..., None], rsw_q, 0.0)) \
+            + jnp.sum(jnp.where(csw_new_f, csw_up_q, 0.0))
+        rsw_q = jnp.where(rsw_new_f[..., None], 0.0, rsw_q)
+        csw_up_q = jnp.where(csw_new_f, 0.0, csw_up_q)
+        acc["fault_link_ticks"] += jnp.sum(rsw_timer > 0) \
+            + jnp.sum(csw_timer > 0)
+
+        # 9b. the controllers, fault-aware: jittered/failing wakes plus
+        # the min-connectivity fallback (force-wake the cheapest healthy
+        # link when the usable prefix died; stall charged to the
+        # fault_stall carry). All knobs zero => bit-identical GateState.
+        rsw_gated, rsw_fwake, rsw_diag = gating.gate_step(
             state.rsw_gate, jnp.maximum(jnp.sum(rsw_q, axis=2), down_rc),
             cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell,
-            max_stage=rsw_max)
-        csw_gated = gating.gate_step(
+            max_stage=rsw_max, link_ok=rsw_timer == 0,
+            link_real=rsw_link_real, u_jitter=u_fr[:, 0],
+            u_fail=u_fr[:, 1], wake_fail_prob=scen.wake_fail_prob,
+            wake_jitter_frac=scen.wake_jitter_frac,
+            fault_wake=state.rsw_fault.wake,
+            fallback=scen.fault_fallback)
+        csw_gated, csw_fwake, csw_diag = gating.gate_step(
             state.csw_gate, jnp.maximum(csw_up_q, fc_down_q.T),
             cap=scen.queue_cap, hi=scen.hi, lo=scen.lo, dwell=scen.dwell,
-            max_stage=csw_max)
+            max_stage=csw_max, link_ok=csw_timer == 0,
+            link_real=csw_link_real, u_jitter=u_fc[:, 0],
+            u_fail=u_fc[:, 1], wake_fail_prob=scen.wake_fail_prob,
+            wake_jitter_frac=scen.wake_jitter_frac,
+            fault_wake=state.csw_fault.wake,
+            fallback=scen.fault_fallback)
 
         def sel(new, old):
             return jax.tree.map(
@@ -863,11 +1056,51 @@ def make_sim_step(hull: FBSite):
 
         rsw_gate = sel(rsw_gated, state.rsw_gate)
         csw_gate = sel(csw_gated, state.csw_gate)
+        # the fallback (and its stall) only exists under gating: an
+        # always-on scenario's links are already all up, so the carry is
+        # pinned to 0 — fault_stall attribution exactly 0, as pinned by
+        # the acceptance tests
+        rsw_fwake = jnp.where(g_on, rsw_fwake, 0)
+        csw_fwake = jnp.where(g_on, csw_fwake, 0)
+        acc["wake_retries"] += jnp.where(
+            g_on, jnp.sum(rsw_diag["retries"]) +
+            jnp.sum(csw_diag["retries"]), 0)
+        acc["forced_wakes"] += jnp.where(
+            g_on, jnp.sum(rsw_diag["forced"]) +
+            jnp.sum(csw_diag["forced"]), 0)
 
+        # 9c. min-connectivity audit on the END-of-tick state: a valid
+        # switch that still HAS a healthy real link but zero usable
+        # ones records a connectivity-loss tick — loss attributable to
+        # the gating policy (links powered off), which the fallback
+        # must drive to exactly 0. A switch whose real links are ALL
+        # simultaneously hard-faulted is excluded: no routing/gating
+        # policy can preserve its connectivity, and that hardware
+        # unavailability is already visible in link_fault_frac /
+        # delivered_frac.
+        rsw_healthy = (rsw_timer == 0) & rsw_link_real
+        csw_healthy = (csw_timer == 0) & csw_link_real
+        rsw_usable_f = gating.usable_links(rsw_gate.stage,
+                                           rsw_gate.draining, P) \
+            & rsw_healthy
+        csw_usable_f = gating.usable_links(csw_gate.stage,
+                                           csw_gate.draining, CUP) \
+            & csw_healthy
+        acc["conn_loss_rack_ticks"] += jnp.sum(
+            rack_valid & jnp.any(rsw_healthy, axis=1)
+            & ~jnp.any(rsw_usable_f, axis=1))
+        acc["conn_loss_csw_ticks"] += jnp.sum(
+            csw_valid & jnp.any(csw_healthy, axis=1)
+            & ~jnp.any(csw_usable_f, axis=1))
+
+        # power accounting: a hard-faulted transceiver is dark — it
+        # draws nothing while dead, whatever the controller thinks
         rsw_pow = jnp.sum(
-            jnp.where(rack_valid[:, None], rsw_gate.powered, False))
+            jnp.where(rack_valid[:, None] & (rsw_timer == 0),
+                      rsw_gate.powered, False))
         csw_pow = jnp.sum(
-            jnp.where(csw_valid[:, None], csw_gate.powered, False))
+            jnp.where(csw_valid[:, None] & (csw_timer == 0),
+                      csw_gate.powered, False))
         acc["rsw_powered"] += rsw_pow
         acc["csw_powered"] += csw_pow
         # gated-link population of the REAL site:
@@ -885,9 +1118,34 @@ def make_sim_step(hull: FBSite):
 
         return SimState(key, burst_on, flow_rem, flow_dest, flow_fast,
                         rsw_q, csw_up_q, csw_down_q, fc_down_q,
-                        rsw_gate, csw_gate, node_on, acc)
+                        rsw_gate, csw_gate,
+                        gating.FaultState(rsw_timer, rsw_fwake),
+                        gating.FaultState(csw_timer, csw_fwake),
+                        node_on, acc)
 
     return step
+
+
+class SweepValidationError(RuntimeError):
+    """Raised by ``validate=True`` sweeps when the in-program guards
+    (finite-value / conservation, see ``run_sweep``) tripped. Carries
+    ``labels`` (the failing scenarios) and ``first_bad_chunk`` (the
+    earliest chunk index at which any of them first failed)."""
+
+    def __init__(self, labels, first_bad_chunk):
+        self.labels = tuple(labels)
+        self.first_bad_chunk = int(first_bad_chunk)
+        super().__init__(
+            f"sweep validation failed for scenario(s) {list(labels)} "
+            f"(first failing chunk: {first_bad_chunk})")
+
+
+#: test hook for the fault-tolerant planned executor: when set, called
+#: as ``BUCKET_FAIL_HOOK(bucket_index, phase)`` with phase in
+#: {"dispatch", "fetch", "retry"} before the corresponding stage of
+#: each bucket; raising from it simulates a bucket failure
+#: (tests/test_faults.py uses this to pin the isolation contract)
+BUCKET_FAIL_HOOK = None
 
 
 def _fold_dtype():
@@ -924,7 +1182,8 @@ def execution_mode(*, fold: str = "device", shard: bool | None = None,
 
 
 def _sweep_chunk_impl(site: FBSite, scen: Scenario, state: SimState,
-                      length: int, live, fold):
+                      length: int, live, fold, guard=None, chunk_idx=None,
+                      tol=None, validate: bool = False):
     global TRACE_COUNT
     TRACE_COUNT += 1          # python side effect: counts traces only
     step = make_sim_step(site)
@@ -939,21 +1198,55 @@ def _sweep_chunk_impl(site: FBSite, scen: Scenario, state: SimState,
                             lambda s: s, st), None
 
     out, _ = jax.lax.scan(tick, state, live, length=length)
-    if fold is None:          # legacy host-fold path: caller fetches acc
-        return out, None
-    # device-resident fold: absorb this chunk's accumulators into the
-    # (sum, comp) Kahan buffer and re-zero them, all inside this same
-    # program — the chunk loop never synchronizes with the host
-    fsum, fcomp = fold
-    nsum, ncomp = {}, {}
-    for k in out.acc:
-        v = out.acc[k].astype(fsum[k].dtype)
-        y = v - fcomp[k]
-        t = fsum[k] + y
-        nsum[k] = t
-        ncomp[k] = (t - fsum[k]) - y
-    out = out._replace(acc=jax.tree.map(jnp.zeros_like, out.acc))
-    return out, (nsum, ncomp)
+    new_fold = None
+    if fold is not None:
+        # device-resident fold: absorb this chunk's accumulators into
+        # the (sum, comp) Kahan buffer and re-zero them, all inside this
+        # same program — the chunk loop never synchronizes with the host
+        fsum, fcomp = fold
+        nsum, ncomp = {}, {}
+        for k in out.acc:
+            v = out.acc[k].astype(fsum[k].dtype)
+            y = v - fcomp[k]
+            t = fsum[k] + y
+            nsum[k] = t
+            ncomp[k] = (t - fsum[k]) - y
+        out = out._replace(acc=jax.tree.map(jnp.zeros_like, out.acc))
+        new_fold = (nsum, ncomp)
+    if not validate:
+        return out, new_fold, guard
+    # ---- opt-in in-program guards (validate=True) -----------------------
+    # per-scenario finite-value check over the in-flight queues and the
+    # running totals, plus the conservation identity
+    #   injected == delivered + drops + fault_drops + in-flight
+    # on the device-fold path (the totals live on device there). The
+    # guard carries, per scenario, the first chunk index at which any
+    # check failed (-1 = clean); chunk_idx/tol are traced scalars so
+    # the chunk loop still reuses one executable.
+    B = guard.shape[0]
+
+    def finite(arrs):
+        ok = jnp.ones((B,), bool)
+        for a in arrs:
+            ok &= jnp.all(jnp.isfinite(a.reshape(B, -1)), axis=1)
+        return ok
+
+    queues = (out.rsw_q, out.csw_up_q, out.csw_down_q, out.fc_down_q)
+    ok = finite(queues)
+    if new_fold is not None:
+        tot = {k: new_fold[0][k] - new_fold[1][k] for k in new_fold[0]}
+        ok &= finite(tuple(tot.values()))
+        in_flight = sum(jnp.sum(q.reshape(B, -1), axis=1) for q in queues)
+        inj = tot["injected"]
+        resid = inj - (tot["csw_down_served"] + tot["drops"]
+                       + tot["fault_drops"] + in_flight.astype(inj.dtype))
+        ok &= jnp.abs(resid) <= tol * jnp.maximum(inj, 1.0)
+    else:
+        # host-fold path: the running totals are host-side; guard the
+        # chunk's own accumulators for finiteness only
+        ok &= finite(tuple(out.acc.values()))
+    guard = jnp.where((guard < 0) & ~ok, chunk_idx, guard)
+    return out, new_fold, guard
 
 
 @functools.lru_cache(maxsize=None)
@@ -963,7 +1256,7 @@ def _sweep_runner():
     kw = {} if jax.default_backend() == "cpu" \
         else {"donate_argnames": ("state", "fold")}
     return jax.jit(_sweep_chunk_impl,
-                   static_argnames=("site", "length"), **kw)
+                   static_argnames=("site", "length", "validate"), **kw)
 
 
 @functools.lru_cache(maxsize=None)
@@ -986,11 +1279,13 @@ class _PendingSweep:
     acc64: dict | None       # host float64 accumulators (fold="host")
     state: SimState          # final device state (maybe padded/sharded)
     n_real: int              # batch rows before devices-multiple padding
+    guard: object = None     # (B,) int32 first-bad-chunk (validate=True)
 
 
 def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
                  chunk_ticks: int = CHUNK_TICKS, fold: str = "device",
-                 shard: bool | None = None) -> _PendingSweep:
+                 shard: bool | None = None, validate: bool = False,
+                 validate_tol: float | None = None) -> _PendingSweep:
     """Dispatch a sweep's chunk programs without fetching results.
 
     With ``fold="device"`` (default) this returns as soon as the last
@@ -1002,6 +1297,8 @@ def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
     global HOST_TRANSFER_COUNT
     if fold not in ("device", "host"):
         raise ValueError(f"fold must be 'device' or 'host', got {fold!r}")
+    if n_ticks < 1:
+        raise ValueError(f"n_ticks must be >= 1, got {n_ticks}")
     hull = batch.hull
     n_real = len(batch)
     scen = batch.scen
@@ -1040,19 +1337,30 @@ def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
         zeros = jax.tree.map(lambda a: jnp.zeros(a.shape, _fold_dtype()),
                              state.acc)
         dev_fold = (zeros, jax.tree.map(jnp.zeros_like, zeros))
+    guard = tol = None
+    if validate:
+        guard = jnp.full((int(seeds.shape[0]),), -1, jnp.int32)
+        tol = jnp.asarray(C.VALIDATE_CONS_REL_TOL if validate_tol is None
+                          else validate_tol, jnp.float32)
     if sharding is not None:
         scen = jax.device_put(scen, sharding)
         state = jax.device_put(state, sharding)
         if dev_fold is not None:
             dev_fold = jax.device_put(dev_fold, sharding)
+        if guard is not None:
+            guard = jax.device_put(guard, sharding)
 
     runner = _sweep_runner()
     acc64 = None
     chunk = max(1, min(chunk_ticks, n_ticks))
     done = 0
+    ci = 0
     while done < n_ticks:
         live = jnp.arange(chunk) < (n_ticks - done)
-        state, dev_fold = runner(hull, scen, state, chunk, live, dev_fold)
+        state, dev_fold, guard = runner(
+            hull, scen, state, chunk, live, dev_fold, guard,
+            jnp.asarray(ci, jnp.int32), tol, validate)
+        ci += 1
         if fold == "host":
             # legacy path: fold this chunk's accumulators into float64
             # on the host and zero them on device — one blocking
@@ -1068,16 +1376,23 @@ def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
                 acc=jax.tree.map(jnp.zeros_like, state.acc))
         done += chunk
     return _PendingSweep(batch=batch, n_ticks=n_ticks, fold=dev_fold,
-                         acc64=acc64, state=state, n_real=n_real)
+                         acc64=acc64, state=state, n_real=n_real,
+                         guard=guard)
 
 
 def _finish_sweep(p: _PendingSweep, return_state: bool = False):
     """Fetch a dispatched sweep's fold buffer (the run's single host
     transfer on the device-fold path) and finalize per-scenario
-    metrics."""
+    metrics. A ``validate=True`` sweep whose in-program guards tripped
+    raises ``SweepValidationError`` here (the guard rides the same
+    transfer as the fold, so the one-transfer contract holds)."""
     global HOST_TRANSFER_COUNT
+    guard_h = None
     if p.fold is not None:
-        fsum, fcomp = jax.device_get(p.fold)
+        if p.guard is not None:
+            (fsum, fcomp), guard_h = jax.device_get((p.fold, p.guard))
+        else:
+            fsum, fcomp = jax.device_get(p.fold)
         HOST_TRANSFER_COUNT += 1
         # Kahan: sum carries the running total, comp the rounding error
         # still to subtract; apply the residual in float64 on the host
@@ -1085,7 +1400,16 @@ def _finish_sweep(p: _PendingSweep, return_state: bool = False):
                  - np.asarray(fcomp[k], np.float64) for k in fsum}
     else:
         acc64 = p.acc64
+        if p.guard is not None:
+            guard_h = jax.device_get(p.guard)
+            HOST_TRANSFER_COUNT += 1
     batch = p.batch
+    if guard_h is not None:
+        bad = [i for i in range(p.n_real) if int(guard_h[i]) >= 0]
+        if bad:
+            raise SweepValidationError(
+                [batch.labels[i] for i in bad],
+                min(int(guard_h[i]) for i in bad))
     res = [
         _finalize({k: v[i] for k, v in acc64.items()}, batch.sites[i],
                   p.n_ticks, batch.gating[i], batch.names[i],
@@ -1102,7 +1426,9 @@ def _finish_sweep(p: _PendingSweep, return_state: bool = False):
 
 def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
               chunk_ticks: int = CHUNK_TICKS, return_state: bool = False,
-              fold: str = "device", shard: bool | None = None):
+              fold: str = "device", shard: bool | None = None,
+              validate: bool = False,
+              validate_tol: float | None = None):
     """Run every scenario of ``batch`` for n_ticks us in one vmapped,
     chunk-scanned program; returns one metrics dict per scenario (same
     schema as ``run_sim``, plus the scenario ``label``). With
@@ -1120,10 +1446,23 @@ def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
     the legacy per-chunk host fold (parity reference). ``shard=None``
     auto-shards the scenario axis across all local devices when more
     than one is visible; ``shard=False`` forces single-device layout.
+
+    ``validate=True`` compiles in-program guards into every chunk: a
+    per-scenario finite-value check over the in-flight queues and
+    running totals, and (device-fold path) the conservation identity
+    injected == delivered + drops + fault_drops + in-flight within
+    ``validate_tol`` (relative; default ``C.VALIDATE_CONS_REL_TOL``).
+    A tripped guard raises ``SweepValidationError`` at fetch time,
+    naming the failing scenario labels and the FIRST failing chunk
+    index — localization without any extra host synchronization (the
+    guard is a (B,) int32 riding the fold transfer). Validation changes
+    the compiled program (one extra trace per hull/shape) but never the
+    simulated dynamics: metric values are identical with it on or off.
     """
     return _finish_sweep(
         _start_sweep(batch, n_ticks, chunk_ticks=chunk_ticks, fold=fold,
-                     shard=shard),
+                     shard=shard, validate=validate,
+                     validate_tol=validate_tol),
         return_state=return_state)
 
 
@@ -1131,7 +1470,9 @@ def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
                       *, max_compiles: int = 4,
                       chunk_ticks: int = CHUNK_TICKS,
                       return_plan: bool = False, fold: str = "device",
-                      shard: bool | None = None, pipeline: bool = True):
+                      shard: bool | None = None, pipeline: bool = True,
+                      validate: bool = False,
+                      validate_tol: float | None = None):
     """Run a heterogeneous-site sweep through the hull-bucketing planner
     (core/planner.py): the (SimParams, seed) pairs are partitioned into
     <= ``max_compiles`` hull buckets by estimated padded cost, each
@@ -1158,6 +1499,21 @@ def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
     ``max_compiles=1`` is the degenerate single-hull case — identical
     to ``run_sweep(make_multi_site_batch(runs), ...)`` (pinned by
     tests/test_planner.py).
+
+    Bucket failures are ISOLATED: an exception while dispatching or
+    fetching one bucket (a poisoned scenario tripping ``validate``
+    guards, a compile failure, an OOM) never takes down the other
+    buckets. The failed bucket is retried ONCE, strictly serially and
+    on the legacy ``fold="host"`` path (the most conservative execution
+    mode: per-chunk synchronization, no device-resident fold buffer);
+    if the retry also fails, that bucket's runs come back as structured
+    error entries — ``{"label", "plan_bucket", "plan_hull", "error":
+    {"type", "message", "stage", "retried"}}`` with ``stage`` the phase
+    of the ORIGINAL failure ("dispatch" or "fetch") — in caller order
+    alongside the successful buckets' metric dicts, so one bad scenario
+    degrades exactly its own bucket and nothing else. All remaining
+    pending buckets are drained even when a fetch raises, so no device
+    buffers are left dangling.
     """
     # local import: the planner is deliberately jax-free and usable
     # standalone; only the execution path needs it
@@ -1169,27 +1525,83 @@ def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
         else tuple(range(len(plan.buckets)))
     pending: dict[int, _PendingSweep] = {}
     fetched: dict[int, list] = {}
-    for k in order:
-        bucket = plan.buckets[k]
-        batch = make_multi_site_batch([runs[i] for i in bucket.indices])
-        ps = _start_sweep(batch, n_ticks, chunk_ticks=chunk_ticks,
-                          fold=fold, shard=shard)
-        if pipeline:
-            pending[k] = ps
-        else:
-            # strictly serial: block on this bucket before the next,
-            # and drop ps so its device state/fold buffers free now —
-            # this IS the advertised one-bucket-resident memory mode
-            fetched[k] = _finish_sweep(ps)
+    errors: dict[int, dict] = {}
+
+    def hook(k, phase):
+        if BUCKET_FAIL_HOOK is not None:
+            BUCKET_FAIL_HOOK(k, phase)
+
+    def retry(k, stage, exc):
+        # one serial retry on the most conservative path; on a second
+        # failure record a structured error for the bucket (stage = the
+        # ORIGINAL failure's phase, message = the final failure's)
+        try:
+            hook(k, "retry")
+            batch = make_multi_site_batch(
+                [runs[i] for i in plan.buckets[k].indices])
+            fetched[k] = _finish_sweep(_start_sweep(
+                batch, n_ticks, chunk_ticks=chunk_ticks, fold="host",
+                shard=shard, validate=validate,
+                validate_tol=validate_tol))
+        except Exception as exc2:          # noqa: BLE001 — isolation
+            errors[k] = {"type": type(exc2).__name__,
+                         "message": str(exc2), "stage": stage,
+                         "retried": True}
+
+    try:
+        for k in order:
+            bucket = plan.buckets[k]
+            try:
+                hook(k, "dispatch")
+                batch = make_multi_site_batch(
+                    [runs[i] for i in bucket.indices])
+                ps = _start_sweep(batch, n_ticks,
+                                  chunk_ticks=chunk_ticks, fold=fold,
+                                  shard=shard, validate=validate,
+                                  validate_tol=validate_tol)
+            except Exception as exc:       # noqa: BLE001 — isolation
+                retry(k, "dispatch", exc)
+                continue
+            if pipeline:
+                pending[k] = ps
+            else:
+                # strictly serial: block on this bucket before the
+                # next, and drop ps so its device state/fold buffers
+                # free now — this IS the advertised one-bucket-resident
+                # memory mode
+                try:
+                    hook(k, "fetch")
+                    fetched[k] = _finish_sweep(ps)
+                except Exception as exc:   # noqa: BLE001 — isolation
+                    retry(k, "fetch", exc)
+        for k in (k for k in order if k in pending):
+            try:
+                hook(k, "fetch")
+                fetched[k] = _finish_sweep(pending.pop(k))
+            except Exception as exc:       # noqa: BLE001 — isolation
+                retry(k, "fetch", exc)
+    finally:
+        # a raising fetch (pre-isolation this propagated) must never
+        # leave later buckets' device state/fold buffers referenced
+        pending.clear()
     results: list = [None] * len(runs)
     for k, bucket in enumerate(plan.buckets):
-        res_k = fetched[k] if not pipeline else _finish_sweep(pending[k])
-        for i, r in zip(bucket.indices, res_k):
-            # the FULL tag — the same format the plan report's bucket
-            # "hull" field uses, so the two can be joined on it
-            r["plan_bucket"] = k
-            r["plan_hull"] = full_site_tag(bucket.hull)
-            results[i] = r
+        # the FULL tag — the same format the plan report's bucket
+        # "hull" field uses, so the two can be joined on it
+        hull_tag = full_site_tag(bucket.hull)
+        if k in fetched:
+            for i, r in zip(bucket.indices, fetched[k]):
+                r["plan_bucket"] = k
+                r["plan_hull"] = hull_tag
+                results[i] = r
+        else:
+            for i in bucket.indices:
+                p, seed = runs[i]
+                results[i] = {
+                    "label": _run_label(p, seed, tag_site=True),
+                    "plan_bucket": k, "plan_hull": hull_tag,
+                    "error": dict(errors[k]),
+                }
     if return_plan:
         return results, plan.report()
     return results
@@ -1283,6 +1695,21 @@ def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
         "injected_pkts": float(a["injected"]),
         "delivered_pkts": float(a["csw_down_served"]),
         "drop_frac": float(a["drops"]) / inj,
+        # availability under faults: delivered fraction, the fault-drop
+        # conservation bin, wake-retry/fallback counts, and the
+        # connectivity-loss audit (all exactly 0 with zero fault knobs)
+        "delivered_frac": float(a["csw_down_served"]) / inj,
+        "fault_drop_frac": float(a["fault_drops"]) / inj,
+        "fault_dropped_pkts": float(a["fault_drops"]),
+        "wake_retries": float(a["wake_retries"]),
+        "forced_wakes": float(a["forced_wakes"]),
+        "conn_loss_rack_ticks": float(a["conn_loss_rack_ticks"]),
+        "conn_loss_csw_ticks": float(a["conn_loss_csw_ticks"]),
+        "conn_loss_ticks": float(a["conn_loss_rack_ticks"]
+                                 + a["conn_loss_csw_ticks"]),
+        # fraction of gated-link-ticks spent hard-faulted (availability)
+        "link_fault_frac": float(a["fault_link_ticks"])
+        / (T * (s.n_rsw_csw_links + s.n_csw_fc_links)),
         "ring_frac": ring_frac,
         "rsw_link_on_frac": rsw_on,
         "csw_link_on_frac": csw_on,
@@ -1302,9 +1729,11 @@ def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
         "delay_mean_sampled_us": float(a["delay_sum"]) / wt,
         "delay_queue_us": float(a["delay_queue_sum"]) / wt,
         "delay_wake_stall_us": float(a["delay_stall_sum"]) / wt,
+        "delay_fault_stall_us": float(a["delay_fault_sum"]) / wt,
         "delay_ring_us": ring_frac * WIRE_HOP_US,
         "delay_frac_inter": float(a["delay_wt_inter"]) / wt,
         "wake_stall_frac": float(a["wake_stall_pkts"]) / wt,
+        "fault_stall_frac": float(a["fault_stall_pkts"]) / wt,
         **occ,
     }
 

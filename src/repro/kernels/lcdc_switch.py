@@ -49,12 +49,14 @@ def _kernel(q_ref, stage_ref, drain_ref, valid_ref, arr_ref, cap_ref,
     q = q_ref[...].reshape(bs, L, K)
     stage = stage_ref[...]                          # (bs, 1) int32
     drain = drain_ref[...] != 0                     # (bs, 1)
-    valid = valid_ref[...] != 0                     # (bs, 1)
+    link_valid = valid_ref[...] != 0                # (bs, L) per-link
     arr = arr_ref[...]                              # (bs, K)
     cap = cap_ref[...]                              # (bs, 1)
+    # a switch is live iff any of its ports is valid
+    vswitch = jnp.any(link_valid, axis=1, keepdims=True)   # (bs, 1)
 
     idx = jax.lax.broadcasted_iota(jnp.int32, (bs, L), 1)
-    act = (idx < stage) & valid
+    act = (idx < stage) & link_valid
     top = idx == stage - 1
     usable = act & ~(drain & top & (stage > 1))
     qtot = jnp.sum(q, axis=2)                       # (bs, L)
@@ -64,15 +66,23 @@ def _kernel(q_ref, stage_ref, drain_ref, valid_ref, arr_ref, cap_ref,
     mn = jnp.min(masked, axis=1, keepdims=True)
     pick = masked == mn
     pick &= jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
+    # per-link faults can leave a live switch with no usable port: keep
+    # the BIG sentinel out of the taps and collapse the room to 0 so
+    # the whole arrival drops (matches ref.switch_step_ref)
+    has_usable = jnp.any(usable, axis=1, keepdims=True)
+    mn0 = jnp.where(has_usable, mn, 0.0)
 
     # (5a) backlog-age of the pick: what an arrival queues behind
-    wait_ref[...] = jnp.where(valid, mn, 0.0) / serve_rate
+    wait_ref[...] = jnp.where(vswitch, mn0, 0.0) / serve_rate
 
-    # (2) enqueue with capacity clamp, proportional over components
+    # (2) enqueue with capacity clamp, proportional over components; an
+    # arrival at a switch with no valid port left (all transceivers
+    # hard-faulted) is a counted drop, not a silent loss (padded
+    # switches receive zero arrivals, so they still report 0)
     add_tot = jnp.sum(arr, axis=1, keepdims=True)   # (bs, 1)
-    room = jnp.maximum(cap - mn, 0.0)
+    room = jnp.where(has_usable, jnp.maximum(cap - mn0, 0.0), 0.0)
     scale = jnp.minimum(1.0, room / jnp.maximum(add_tot, 1e-9))
-    drop_ref[...] = add_tot * (1.0 - scale) * valid
+    drop_ref[...] = jnp.where(vswitch, add_tot * (1.0 - scale), add_tot)
     q = q + pick.astype(q.dtype)[..., None] \
         * (arr * scale)[:, None, :]
 
@@ -90,16 +100,16 @@ def _kernel(q_ref, stage_ref, drain_ref, valid_ref, arr_ref, cap_ref,
     qpost = qtot - serve_tot
 
     # (5b) post-serve occupancy moments over the output ports
-    m1_ref[...] = jnp.where(valid, jnp.sum(qpost, axis=1, keepdims=True),
-                            0.0)
-    m2_ref[...] = jnp.where(valid,
+    m1_ref[...] = jnp.where(vswitch,
+                            jnp.sum(qpost, axis=1, keepdims=True), 0.0)
+    m2_ref[...] = jnp.where(vswitch,
                             jnp.sum(qpost * qpost, axis=1, keepdims=True),
                             0.0)
     hi_o_ref[...] = jnp.any((qpost > hi_ref[...] * cap) & act, axis=1,
                             keepdims=True).astype(jnp.int32)
     lo_o_ref[...] = (jnp.all(jnp.where(act, qpost < lo_ref[...] * cap,
                                        True), axis=1, keepdims=True)
-                     & valid).astype(jnp.int32)
+                     & vswitch).astype(jnp.int32)
 
 
 def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
@@ -107,9 +117,10 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
                 interpret=True):
     """queues (S, L, K) or (S, L); stage (S,) int32; arrivals (S, K) or
     (S,); draining (S,) bool; valid (S,) bool padding mask (invalid
-    switches are inert). Same contract as ref.switch_step_ref: returns
-    (new_queues, served, hi_trig, lo_trig, dropped, enq_wait, occ_m1,
-    occ_m2)."""
+    switches are inert) or (S, L) bool per-link usability mask (the
+    fault-injection axis: dead ports on live switches). Same contract
+    as ref.switch_step_ref: returns (new_queues, served, hi_trig,
+    lo_trig, dropped, enq_wait, occ_m1, occ_m2)."""
     squeeze = queues.ndim == 2
     if squeeze:
         queues = queues[..., None]
@@ -119,6 +130,9 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
         draining = jnp.zeros((S,), bool)
     if valid is None:
         valid = jnp.ones((S,), bool)
+    # per-switch masks broadcast to the kernel's per-link operand
+    link_valid = jnp.broadcast_to(valid[:, None], (S, L)) \
+        if valid.ndim == 1 else jnp.asarray(valid, bool)
 
     # pad the switch axis to the block size (idle switches: stage 1,
     # empty queues, zero arrivals, valid=0) and slice the outputs back
@@ -129,7 +143,7 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
     qp = jnp.pad(queues, ((0, pad), (0, 0), (0, 0))).reshape(Sp, L * K)
     stage_p = jnp.pad(stage, (0, pad), constant_values=1)[:, None]
     drain_p = jnp.pad(draining, (0, pad)).astype(jnp.int32)[:, None]
-    valid_p = jnp.pad(valid, (0, pad)).astype(jnp.int32)[:, None]
+    valid_p = jnp.pad(link_valid, ((0, pad), (0, 0))).astype(jnp.int32)
     arr_p = jnp.pad(arrivals, ((0, pad), (0, 0)))
     def col(v):
         # scalar or per-switch (S,) knob -> padded (Sp, 1) operand column
@@ -143,10 +157,11 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
     spec_lk = pl.BlockSpec((bs, L * K), lambda i: (i, 0))
     spec_1 = pl.BlockSpec((bs, 1), lambda i: (i, 0))
     spec_k = pl.BlockSpec((bs, K), lambda i: (i, 0))
+    spec_l = pl.BlockSpec((bs, L), lambda i: (i, 0))
     qo, srv, hi_t, lo_t, drop, wait, m1, m2 = pl.pallas_call(
         kern,
         grid=(Sp // bs,),
-        in_specs=[spec_lk, spec_1, spec_1, spec_1, spec_k, spec_1, spec_1,
+        in_specs=[spec_lk, spec_1, spec_1, spec_l, spec_k, spec_1, spec_1,
                   spec_1],
         out_specs=[spec_lk, spec_lk, spec_1, spec_1, spec_1, spec_1,
                    spec_1, spec_1],

@@ -50,9 +50,12 @@ def switch_step(queues, stage, arrivals, draining=None, *, valid=None,
     Pallas on TPU, pure-jnp reference on CPU — identical semantics
     (tests/test_kernels.py pins the kernel to the oracle). See
     ref.switch_step_ref for the argument/return contract; queues may be
-    (S, L, K) component-split or plain (S, L). ``valid`` is the (S,)
-    padding mask of heterogeneous-site batches (invalid switches are
-    inert). Besides the datapath outputs, both paths emit the per-switch
+    (S, L, K) component-split or plain (S, L). ``valid`` is either the
+    (S,) padding mask of heterogeneous-site batches (invalid switches
+    are inert) or an (S, L) per-LINK usability mask — the
+    fault-injection axis: a hard-faulted transceiver is a dead port on
+    an otherwise live switch. Besides the datapath outputs, both paths
+    emit the per-switch
     backlog-age (``enq_wait``: what an arrival queues behind, in ticks)
     and post-serve occupancy moments (``occ_m1``/``occ_m2``) that feed
     the simulator's in-scan delay histograms, so the distribution

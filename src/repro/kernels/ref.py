@@ -58,12 +58,19 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     arrivals: (S, K) — or (S,) with 2-D queues — per-switch arrival
               vector enqueued onto the min-backlog usable port.
     draining: (S,) bool; a draining top port serves but does not accept.
-    valid:    (S,) bool; padding mask for heterogeneous-site batches. An
-              invalid switch is inert: it accepts nothing, serves
-              nothing, raises no triggers, and its queues pass through
-              unchanged. Callers must feed invalid switches zero
-              arrivals (the enqueue is suppressed, so nonzero arrivals
-              there would be silently discarded without a drop count).
+    valid:    (S,) bool padding mask for heterogeneous-site batches, or
+              (S, L) bool per-LINK usability mask (the fault-injection
+              axis: a hard-faulted transceiver is a dead port on an
+              otherwise live switch — it accepts nothing and serves
+              nothing, while the switch's healthy ports keep working).
+              A switch with no valid port at all is inert: it accepts
+              nothing, serves nothing, raises no triggers, and its
+              queues pass through unchanged — but any arrival fed to it
+              IS counted as a drop (a whole-switch fault outage must
+              not silently lose packets). Padded switches stay
+              drop-free because callers feed them zero arrivals;
+              arrivals at a live switch whose usable ports are all
+              dead are counted as drops too.
 
     Semantics per switch: (1) pick the usable port with the least total
     backlog, (2) enqueue the arrival vector there, proportionally scaled
@@ -97,9 +104,14 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
         draining = jnp.zeros((S,), bool)
     if valid is None:
         valid = jnp.ones((S,), bool)
+    # (S,) per-switch padding mask or (S, L) per-link fault/usability
+    # mask — broadcast to per-link; a switch is live iff any port is
+    link_valid = valid[:, None] if valid.ndim == 1 \
+        else jnp.asarray(valid, bool)
+    vswitch = jnp.any(link_valid, axis=1)               # (S,)
 
-    act = (jnp.arange(L)[None, :] < stage[:, None]) & valid[:, None]
-    usable = gating.usable_links(stage, draining, L) & valid[:, None]
+    act = (jnp.arange(L)[None, :] < stage[:, None]) & link_valid
+    usable = gating.usable_links(stage, draining, L) & link_valid
     qtot = jnp.sum(queues, axis=2)                      # (S, L)
 
     # (1) min-backlog usable port, ties to the lowest index
@@ -107,15 +119,25 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
     mn = jnp.min(masked, axis=1, keepdims=True)
     pick = masked == mn
     pick &= jnp.cumsum(pick.astype(jnp.int32), axis=1) == 1
+    # per-link faults can leave a live switch with NO usable port this
+    # tick (its pick row is all-False): guard the BIG sentinel out of
+    # the taps and drop the whole arrival below (room collapses to 0)
+    has_usable = jnp.any(usable, axis=1)
+    mn0 = jnp.where(has_usable, mn[:, 0], 0.0)
 
     # (5a) backlog-age of the pick: what an arrival queues behind
-    enq_wait = jnp.where(valid, mn[:, 0], 0.0) / serve_rate
+    enq_wait = jnp.where(vswitch, mn0, 0.0) / serve_rate
 
-    # (2) enqueue with capacity clamp (proportional over components)
+    # (2) enqueue with capacity clamp (proportional over components);
+    # an arrival at a switch with NO valid port left (every transceiver
+    # hard-faulted) is a counted drop, not a silent loss — packet
+    # conservation must survive whole-switch fault outages. Padded
+    # (invalid) switches still report 0: they receive zero arrivals.
     add_tot = jnp.sum(arrivals, axis=1)                 # (S,)
-    room = jnp.maximum(cap - mn[:, 0], 0.0)
+    room = jnp.where(has_usable,
+                     jnp.maximum(cap - mn0, 0.0), 0.0)
     scale = jnp.minimum(1.0, room / jnp.maximum(add_tot, 1e-9))
-    dropped = add_tot * (1.0 - scale) * valid
+    dropped = jnp.where(vswitch, add_tot * (1.0 - scale), add_tot)
     q = queues + pick.astype(queues.dtype)[..., None] \
         * (arrivals * scale[:, None])[:, None, :]
 
@@ -130,14 +152,15 @@ def switch_step_ref(queues, stage, arrivals, draining=None, *,
 
     # (5b) post-serve occupancy moments over the switch's output ports
     qpost = qtot - serve_tot
-    occ_m1 = jnp.where(valid, jnp.sum(qpost, axis=1), 0.0)
-    occ_m2 = jnp.where(valid, jnp.sum(qpost * qpost, axis=1), 0.0)
+    occ_m1 = jnp.where(vswitch, jnp.sum(qpost, axis=1), 0.0)
+    occ_m2 = jnp.where(vswitch, jnp.sum(qpost * qpost, axis=1), 0.0)
 
-    # (4) watermark triggers on post-serve backlogs (shared definition);
-    # invalid switches never trigger
-    hi_t, lo_t = gating.watermark_triggers(qpost, stage,
-                                           cap=cap, hi=hi, lo=lo)
-    hi_t, lo_t = hi_t & valid, lo_t & valid
+    # (4) watermark triggers on post-serve backlogs (shared definition,
+    # restricted to the valid/healthy ports); invalid switches never
+    # trigger
+    hi_t, lo_t = gating.watermark_triggers(qpost, stage, cap=cap, hi=hi,
+                                           lo=lo, link_valid=link_valid)
+    hi_t, lo_t = hi_t & vswitch, lo_t & vswitch
     if squeeze:
         q, served = q[..., 0], served[..., 0]
     return (q, served, hi_t.astype(jnp.int32), lo_t.astype(jnp.int32),

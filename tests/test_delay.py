@@ -65,12 +65,15 @@ def test_bin_edges_match_binning():
 
 def test_attribution_identity(delay_results):
     """The sampled mean decomposes exactly into fixed path cost +
-    queueing + wake stalls (the split _finalize reports)."""
+    queueing + wake stalls + fault stalls (the split _finalize
+    reports; the fault term is exactly 0 here — zero fault knobs)."""
     res, _ = delay_results
     for r in res:
         base = S.STACK_US + 4.0 * S.WIRE_HOP_US \
             + 2.0 * S.WIRE_HOP_US * r["delay_frac_inter"]
-        total = base + r["delay_queue_us"] + r["delay_wake_stall_us"]
+        total = base + r["delay_queue_us"] + r["delay_wake_stall_us"] \
+            + r["delay_fault_stall_us"]
+        assert r["delay_fault_stall_us"] == 0.0
         assert abs(total - r["delay_mean_sampled_us"]) \
             <= 1e-5 * max(total, 1.0), r["label"]
 

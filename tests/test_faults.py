@@ -1,0 +1,331 @@
+"""Optical fault-injection subsystem: knob validation, zero-rate
+inertness, conservation with the fault-drop bin, the connectivity-
+preserving fallback contract (hypothesis property + full-sim audit),
+the fault-tolerant planned executor, and the opt-in validate mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import constants as C
+from repro.core import gating
+from repro.core import simulator as S
+from repro.core.topology import FBSite
+from repro.core.traffic import TRAFFIC_SPECS
+
+TICKS = 2_000
+# small-but-real site: two clusters so inter traffic exercises the CSW/FC
+# tiers, same shape the fault frontier bench smokes
+SITE = FBSite(n_clusters=2, racks_per_cluster=8, servers_per_rack=8,
+              csw_per_cluster=2, n_fc=2, csw_ring_links=4, fc_ring_links=8)
+# harsh enough that every fault mechanism fires within TICKS
+HARSH = dict(wake_fail_prob=0.30, wake_jitter_frac=0.50,
+             link_mtbf_ticks=5_000.0, repair_ticks=400)
+
+
+def _params(**kw):
+    # rate_scale 1.6 keeps the stage churning so wake events (the thing
+    # the fail/jitter knobs act on) actually occur
+    kw.setdefault("rate_scale", 1.6)
+    return S.SimParams(spec=TRAFFIC_SPECS["fb_hadoop"], site=SITE, **kw)
+
+
+@pytest.fixture(scope="module")
+def fault_results():
+    """One sweep over the four canonical fault modes (zero-knob LC/DC,
+    harsh LC/DC with and without the fallback, harsh always-on), with
+    the final state for the conservation audit."""
+    rows = {
+        "zero": _params(),
+        "fallback": _params(**HARSH),
+        "nofb": _params(**HARSH, fault_fallback=False),
+        "base": _params(**HARSH, gating_enabled=False),
+    }
+    batch = S.make_batch([(p, 8 + i) for i, p in enumerate(rows.values())])
+    res, state = S.run_sweep(batch, TICKS, chunk_ticks=500,
+                             return_state=True)
+    return dict(zip(rows, res)), state
+
+
+# ---- knob validation (satellite a) --------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(rate_scale=-0.5), "rate_scale"),
+    (dict(queue_cap=0.0), "queue_cap"),
+    (dict(hi=0.3, lo=0.5), "inverted watermarks"),
+    (dict(wake_fail_prob=1.0), "wake_fail_prob"),
+    (dict(wake_fail_prob=-0.1), "wake_fail_prob"),
+    (dict(wake_jitter_frac=1.5), "wake_jitter_frac"),
+    (dict(link_mtbf_ticks=-1.0), "link_mtbf_ticks"),
+    (dict(link_mtbf_ticks=0.5), "link_mtbf_ticks"),
+    (dict(repair_ticks=-1), "repair_ticks"),
+    (dict(link_mtbf_ticks=100.0, repair_ticks=0), "repair_ticks"),
+])
+def test_simparams_rejects_bad_knobs(kw, match):
+    with pytest.raises(ValueError, match=match):
+        _params(**kw)
+
+
+def test_zero_ticks_rejected():
+    batch = S.make_batch([(_params(), 0)])
+    with pytest.raises(ValueError, match="n_ticks must be >= 1"):
+        S.run_sweep(batch, 0)
+
+
+# ---- zero-rate inertness ------------------------------------------------
+
+def test_zero_knobs_fault_metrics_exactly_zero(fault_results):
+    res, _ = fault_results
+    r = res["zero"]
+    for k in ("fault_drop_frac", "fault_dropped_pkts", "wake_retries",
+              "forced_wakes", "conn_loss_ticks", "link_fault_frac",
+              "delay_fault_stall_us", "fault_stall_frac"):
+        assert r[k] == 0.0, k
+
+
+def test_gate_step_zero_rate_bit_parity():
+    """Fault-mode gate_step with zero knobs and all-healthy links is
+    bit-identical to the legacy fault-free path, tick by tick."""
+    rng = np.random.default_rng(3)
+    Ssw, L = 6, 4
+    legacy = fault = gating.gate_init(Ssw, L)
+    fwake = jnp.zeros((Ssw,), jnp.int32)
+    ones = jnp.ones((Ssw, L), bool)
+    for _ in range(40):
+        q = jnp.asarray(
+            rng.uniform(0, C.QUEUE_CAP_PKTS, (Ssw, L)), jnp.float32)
+        legacy = gating.gate_step(legacy, q)
+        fault, fwake, diag = gating.gate_step(
+            fault, q, link_ok=ones, link_real=ones,
+            u_jitter=jnp.asarray(rng.random(Ssw), jnp.float32),
+            u_fail=jnp.asarray(rng.random(Ssw), jnp.float32),
+            fault_wake=fwake)
+        for a, b in zip(legacy, fault):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not np.any(np.asarray(diag["retries"]))
+        assert not np.any(np.asarray(diag["forced"]))
+        assert not np.any(np.asarray(fwake))
+
+
+# ---- conservation under faults (satellite c) ----------------------------
+
+def test_conservation_with_fault_drops(fault_results):
+    """injected == delivered + queue-drops + fault-drops + in-flight,
+    exactly (f32 fold noise only), in EVERY fault mode."""
+    res, state = fault_results
+    for i, (mode, r) in enumerate(res.items()):
+        in_flight = sum(
+            float(np.sum(np.asarray(q)[i]))
+            for q in (state.rsw_q, state.csw_up_q, state.csw_down_q,
+                      state.fc_down_q))
+        inj = r["injected_pkts"]
+        acct = (r["delivered_pkts"] + r["drop_frac"] * inj
+                + r["fault_dropped_pkts"] + in_flight)
+        assert abs(inj - acct) <= 1e-3 * max(inj, 1.0), (mode, inj, acct)
+
+
+def test_fault_mechanisms_actually_fire(fault_results):
+    """The harsh knobs exercise every mechanism (guards against a test
+    that passes vacuously because faults never happened)."""
+    res, _ = fault_results
+    harsh = res["fallback"]
+    assert harsh["link_fault_frac"] > 0.0
+    assert harsh["wake_retries"] + harsh["forced_wakes"] > 0.0
+    assert harsh["delivered_frac"] > 0.5  # degraded but not collapsed
+    assert res["nofb"]["wake_retries"] > 0.0
+
+
+# ---- connectivity contract ----------------------------------------------
+
+def test_fallback_no_avoidable_connectivity_loss(fault_results):
+    """With the fallback, a switch that still has a healthy real link
+    NEVER sits with zero usable links — the audit is exactly 0."""
+    res, _ = fault_results
+    assert res["fallback"]["conn_loss_ticks"] == 0.0
+
+
+def test_no_fallback_loses_connectivity(fault_results):
+    res, _ = fault_results
+    assert res["nofb"]["conn_loss_ticks"] > 0.0
+
+
+def test_gating_disabled_fault_stall_exactly_zero(fault_results):
+    """Always-on links never wake, so the wake-fail/jitter knobs and
+    the fallback have nothing to act on: those bins are EXACTLY 0 even
+    under harsh knobs (hard faults still drop packets)."""
+    res, _ = fault_results
+    base = res["base"]
+    assert base["fault_stall_frac"] == 0.0
+    assert base["delay_fault_stall_us"] == 0.0
+    assert base["wake_retries"] == 0.0
+    assert base["forced_wakes"] == 0.0
+    assert base["conn_loss_ticks"] == 0.0
+    assert base["link_fault_frac"] > 0.0  # hard faults still strike
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_fallback_min_connectivity_property(seed):
+    """Hypothesis property: under RANDOM gate/fault sequences the
+    fallback-enabled controller always leaves every switch that has a
+    healthy real link with at least one USABLE healthy link after the
+    tick — the min-connectivity invariant the datapath relies on."""
+    rng = np.random.default_rng(seed)
+    Ssw, L = 4, 4
+    n_real = rng.integers(1, L + 1, size=Ssw)
+    link_real = np.arange(L)[None, :] < n_real[:, None]
+    state = gating.gate_init(Ssw, L)
+    fwake = jnp.zeros((Ssw,), jnp.int32)
+    for _ in range(25):
+        q = rng.uniform(0, C.QUEUE_CAP_PKTS, (Ssw, L)) * link_real
+        # random hard-fault pattern; switches may lose EVERY real link
+        # (the unavoidable case the invariant is conditioned on)
+        ok = (rng.random((Ssw, L)) > 0.4) & link_real
+        link_ok = jnp.asarray(ok)
+        state, fwake, _ = gating.gate_step(
+            state, jnp.asarray(q, jnp.float32),
+            max_stage=jnp.asarray(n_real, jnp.int32),
+            link_ok=link_ok, link_real=jnp.asarray(link_real),
+            u_jitter=jnp.asarray(rng.random(Ssw), jnp.float32),
+            u_fail=jnp.asarray(rng.random(Ssw), jnp.float32),
+            wake_fail_prob=0.3, wake_jitter_frac=0.5,
+            fault_wake=fwake, fallback=True)
+        usable_ok = np.asarray(
+            gating.usable_links(state.stage, state.draining, L) & link_ok)
+        has_ok = ok.any(axis=1)
+        assert np.all(~has_ok | usable_ok.any(axis=1)), \
+            (has_ok, usable_ok, np.asarray(state.stage))
+
+
+def test_no_fallback_can_strand_a_switch():
+    """The deterministic counterexample the fallback exists for: stage 1
+    with link 0 hard-faulted leaves zero usable links without the
+    fallback, and exactly one (the cheapest healthy link) with it."""
+    state = gating.gate_init(1, 4)
+    q = jnp.zeros((1, 4), jnp.float32)
+    ok = jnp.asarray([[False, True, True, True]])
+    ones = jnp.ones((1, 4), bool)
+    kw = dict(link_ok=ok, link_real=ones,
+              u_jitter=jnp.zeros((1,)), u_fail=jnp.ones((1,)),
+              fault_wake=jnp.zeros((1,), jnp.int32))
+    stranded, _, d0 = gating.gate_step(state, q, fallback=False, **kw)
+    saved, fwake, d1 = gating.gate_step(state, q, fallback=True, **kw)
+    usable = gating.usable_links(stranded.stage, stranded.draining, 4) & ok
+    assert not np.any(np.asarray(usable))
+    assert not np.any(np.asarray(d0["forced"]))
+    usable = gating.usable_links(saved.stage, saved.draining, 4) & ok
+    assert np.asarray(usable).sum() == 1 and np.asarray(usable)[0, 1]
+    assert np.all(np.asarray(d1["forced"]))
+    assert int(fwake[0]) > 0  # the force-wake's stall is charged
+
+
+# ---- fault-tolerant planned executor ------------------------------------
+
+def _two_bucket_runs():
+    """Two distinct sites so the planner yields two hull buckets."""
+    site_b = FBSite(n_clusters=2, racks_per_cluster=4, servers_per_rack=8,
+                    csw_per_cluster=2, n_fc=2, csw_ring_links=4,
+                    fc_ring_links=8)
+    spec = TRAFFIC_SPECS["fb_hadoop"]
+    return [(S.SimParams(spec=spec, site=SITE), 0),
+            (S.SimParams(spec=spec, site=site_b), 1),
+            (S.SimParams(spec=spec, site=SITE, gating_enabled=False), 2)]
+
+
+def test_planned_sweep_isolates_permanent_bucket_failure():
+    """A bucket that fails dispatch AND its serial retry comes back as
+    structured error entries in caller order; the other bucket's runs
+    complete untouched."""
+    runs = _two_bucket_runs()
+    calls = []
+
+    def hook(k, phase):
+        calls.append((k, phase))
+        if k == 0:
+            raise RuntimeError("boom retry")
+
+    S.BUCKET_FAIL_HOOK = hook
+    try:
+        res = S.run_sweep_planned(runs, 600, max_compiles=2,
+                                  chunk_ticks=300)
+    finally:
+        S.BUCKET_FAIL_HOOK = None
+    assert len(res) == len(runs)
+    good = [r for r in res if "error" not in r]
+    bad = [r for r in res if "error" in r]
+    assert good and bad
+    # the original failure phase and the retry are both recorded
+    for r in bad:
+        assert r["error"] == {"type": "RuntimeError",
+                              "message": "boom retry",
+                              "stage": "dispatch", "retried": True}
+        assert r["plan_bucket"] == 0
+        assert r["label"] and r["plan_hull"]
+    # caller order preserved: every entry matches its run's site/params
+    for (p, seed), r in zip(runs, res):
+        assert f"s{seed}" in r["label"]
+    # the surviving bucket produced real metrics
+    assert all(r["injected_pkts"] > 0 for r in good)
+    assert (0, "retry") in calls
+
+
+def test_planned_sweep_retry_succeeds_after_transient_failure():
+    """A bucket that fails once at dispatch is retried serially (on the
+    host-fold path) and succeeds: no error entries, caller order kept,
+    and the hook sees dispatch -> retry -> next bucket."""
+    runs = _two_bucket_runs()
+    calls = []
+
+    def hook(k, phase):
+        calls.append((k, phase))
+        if k == 0 and phase == "dispatch":
+            raise RuntimeError("transient")
+
+    S.BUCKET_FAIL_HOOK = hook
+    try:
+        res = S.run_sweep_planned(runs, 600, max_compiles=2,
+                                  chunk_ticks=300, pipeline=False)
+    finally:
+        S.BUCKET_FAIL_HOOK = None
+    assert all("error" not in r for r in res)
+    assert all(r["injected_pkts"] > 0 for r in res)
+    assert calls == [(0, "dispatch"), (0, "retry"),
+                     (1, "dispatch"), (1, "fetch")]
+
+
+# ---- validate mode ------------------------------------------------------
+
+def test_validate_clean_pass_is_inert():
+    """validate=True never changes the dynamics: every PARITY_KEY is
+    bit-identical with the guards on, and the device-fold path still
+    does exactly one trace and one host transfer."""
+    batch = S.sweep_grid(traces=("university",), gating=(True,),
+                         rate_scales=(1.5,))
+    plain = S.run_sweep(batch, 800, chunk_ticks=300)
+    t0, h0 = S.TRACE_COUNT, S.HOST_TRANSFER_COUNT
+    checked = S.run_sweep(batch, 800, chunk_ticks=300, validate=True)
+    assert S.TRACE_COUNT - t0 == 1
+    assert S.HOST_TRANSFER_COUNT - h0 == 1
+    diff, key = S.worst_parity(plain, checked)
+    assert diff == 0.0, key
+
+
+def test_validate_trips_and_localizes():
+    """An impossible tolerance trips the conservation guard on the very
+    first chunk, naming every failing scenario label."""
+    batch = S.sweep_grid(traces=("university",), gating=(True, False),
+                         rate_scales=(1.5,))
+    with pytest.raises(S.SweepValidationError) as ei:
+        S.run_sweep(batch, 800, chunk_ticks=300, validate=True,
+                    validate_tol=-1.0)
+    err = ei.value
+    assert err.first_bad_chunk == 0
+    assert set(err.labels) == set(batch.labels)
+
+
+def test_validate_host_fold_path():
+    """The legacy host-fold path supports the finite-value guard too
+    (its per-chunk accumulators are checked instead of the fold)."""
+    batch = S.sweep_grid(traces=("university",), gating=(True,))
+    res = S.run_sweep(batch, 600, chunk_ticks=300, fold="host",
+                      validate=True)
+    assert res[0]["injected_pkts"] > 0

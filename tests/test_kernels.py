@@ -149,6 +149,39 @@ def test_switch_step_valid_mask_vs_ref(S, L, K, block):
     assert np.all(np.asarray(occ_m2)[inv] == 0)
 
 
+@pytest.mark.parametrize("S,L,K,block", [(64, 4, 2, 32), (100, 4, 1, 128)])
+def test_switch_step_per_link_valid_vs_ref(S, L, K, block):
+    """The fault-injection axis: valid may be a PER-LINK (S, L) mask.
+    Pallas matches the ref oracle; a dead port never serves and never
+    receives the enqueue pick; a live switch whose ports are ALL dead
+    counts its fed arrivals as drops (no silent loss)."""
+    ks = jax.random.split(jax.random.PRNGKey(17), 4)
+    q = jax.random.uniform(ks[0], (S, L, K)) * 15
+    stage = jax.random.randint(ks[1], (S,), 1, L + 1)
+    link_valid = jax.random.bernoulli(ks[2], 0.55, (S, L))
+    # force a few all-dead switches so the whole-switch-outage drop
+    # accounting is actually exercised
+    link_valid = link_valid.at[:4].set(False)
+    arr = jax.random.uniform(ks[3], (S, K)) * 2
+    a = switch_step(q, stage, arr, valid=link_valid, block_s=block)
+    b = ref.switch_step_ref(q, stage, arr, valid=link_valid)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-6)
+    nq, served, _, _, drop, _, _, _ = b
+    dead = ~np.asarray(link_valid)
+    # dead ports: untouched backlog, zero service
+    np.testing.assert_allclose(np.asarray(jnp.sum(nq, 2))[dead],
+                               np.asarray(jnp.sum(q, 2))[dead])
+    assert np.all(np.asarray(jnp.sum(served, 2))[dead] == 0)
+    # all-dead switches drop their entire arrival vector, exactly
+    alldead = dead.all(axis=1)
+    assert alldead[:4].all()
+    np.testing.assert_allclose(
+        np.asarray(drop)[alldead],
+        np.asarray(jnp.sum(arr, 1))[alldead], atol=1e-6)
+
+
 def test_switch_step_per_switch_cap_vs_ref():
     """cap may be a per-switch array; must survive the padded block."""
     ks = jax.random.split(jax.random.PRNGKey(11), 3)
