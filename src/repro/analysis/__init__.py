@@ -1,0 +1,48 @@
+"""Contract-aware static analysis for the sweep engine (PR 7).
+
+Six PRs of performance contracts — one compile per (site, batch-shape),
+exactly one host transfer per ``run_sweep``, Scenario knobs as array
+leaves, PRNG ``fold_in`` discipline, zero-rate bit-parity — were
+runtime pins only. This package makes them machine-checkable at
+analysis time, per file, with named rules (mirrored in ROADMAP.md
+"Static contracts (as of PR 7)"):
+
+* **RL001 traced-control-flow** — no Python ``if``/``while``/``assert``
+  or ``float()/int()/bool()/.item()`` on values derived from traced
+  arguments inside any function reachable from a ``jax.jit`` /
+  ``pl.pallas_call`` / ``lax.scan`` site (taint.py: interprocedural
+  taint from traced roots).
+* **RL002 compile-site-registry** — every ``jit``/``pallas_call``/
+  ``lax.scan`` callsite is declared in ``compile_sites.toml`` with its
+  expected trace multiplicity; registry drift vs the code or vs the
+  ``TRACE_COUNT`` probe is a finding (registry.py).
+* **RL003 host-transfer-smell** — ``jax.device_get`` /
+  ``.block_until_ready()`` in hot-loop modules outside the blessed
+  fetch points (``[[blessed_transfer]]``), plus ``np.asarray`` /
+  array-``__iter__`` over traced values inside traced functions.
+* **RL004 scenario-leaf-sync** — Scenario/SimParams fields must match
+  the registry inventory: fingerprint knobs == ``FAULT_KNOBS``, every
+  param validated in ``__post_init__`` or exempted with a reason, the
+  schema version pinned on both sides, no dead Scenario leaves.
+* **RL005 prng-discipline** — a key feeding two sampling calls without
+  an intervening ``split``/``fold_in`` (checkers.py).
+* **RL006 dtype-discipline** — float64 literals/dtypes in bit-exact
+  kernel/ref/gating modules.
+
+Workflow: ``python -m repro.analysis --check`` (CI lint-canary);
+``--json``/``--dead-code`` write reports under ``results/``. To bless a
+violation, either register it (compile site, blessed transfer,
+validation exemption — all reviewed registry edits) or annotate the
+line with ``# repro-lint: disable=RULE(reason)``; reasons are
+mandatory and the total suppression count is baselined by
+``max_suppressions`` (it can only go down silently, never up).
+
+Runtime cross-validation lives in sanitizer.py: a conftest fixture
+arms ``jax.transfer_guard_device_to_host("disallow")`` and a
+``jax.log_compiles`` recompile detector around the sweep tests,
+asserting the planner pipeline's one-trace-per-bucket contract with
+per-hull attribution (the ``TRACE_HOOK`` seam in simulator.py).
+"""
+from .engine import LintReport, run_lint          # noqa: F401
+from .findings import Finding, RULES              # noqa: F401
+from .registry import load_config                 # noqa: F401

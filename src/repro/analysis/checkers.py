@@ -1,0 +1,296 @@
+"""Non-taint checkers: RL003 (host-side transfer smells in hot
+modules), RL005 (PRNG key discipline), RL006 (dtype discipline).
+
+RL003 has two halves. The taint engine (taint.py) catches transfers of
+*traced* values inside traced functions; this module catches the
+host-side half — ``jax.device_get`` / ``.block_until_ready()`` anywhere
+in a hot-loop module outside the blessed fetch points declared in
+compile_sites.toml. The blessed points are the contract: exactly the
+fetches the HOST_TRANSFER_COUNT pin counts.
+
+RL005 walks every function linearly, tracking PRNG-key names: a name
+assigned from ``jax.random.PRNGKey/split/fold_in`` is *fresh*; a
+sampling call consumes it; a second sampling call on a consumed name
+without re-derivation is the finding. Passing a key into an opaque
+call marks it consumed (the callee may sample) but is not itself a
+finding. Loop bodies run twice so a key consumed across iterations is
+caught.
+
+RL006 flags float64 dtypes — ``np.float64`` / ``jnp.float64`` /
+``np.double`` attributes, ``dtype="float64"`` / ``dtype=float`` /
+``.astype("float64")`` — in the bit-exact modules (kernels, gating):
+results there must be identical whether or not x64 is enabled, so any
+float64 request is either dead (x64 off) or a parity break (x64 on).
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from .astutil import ModuleIndex, dotted_name, resolves_to
+from .findings import Finding
+
+#: parameter names treated as PRNG keys on function entry (a key that
+#: *arrives* as an argument is fresh; reuse inside the body is still
+#: reuse even though the derivation happened in the caller)
+_KEYISH = re.compile(r"(^|_)(key|keys|rng|prng)(_|$)", re.IGNORECASE)
+
+_SAMPLERS = (
+    "uniform", "normal", "bernoulli", "randint", "choice",
+    "permutation", "categorical", "gamma", "beta", "exponential",
+    "truncated_normal", "gumbel", "laplace", "poisson", "bits",
+    "rademacher", "dirichlet", "multivariate_normal", "t", "cauchy",
+    "loggamma", "logistic", "maxwell", "orthogonal", "rayleigh",
+    "weibull_min", "ball", "binomial", "chisquare", "f", "geometric",
+    "generalized_normal", "pareto", "triangular", "wald",
+)
+_DERIVERS = ("split", "fold_in", "PRNGKey", "key", "clone",
+             "wrap_key_data", "key_data")
+_SAMPLER_DOTTED = tuple(f"jax.random.{s}" for s in _SAMPLERS)
+_DERIVER_DOTTED = tuple(f"jax.random.{d}" for d in _DERIVERS)
+
+_F64_ATTRS = ("numpy.float64", "numpy.double", "numpy.longdouble",
+              "jax.numpy.float64", "numpy.complex128",
+              "jax.numpy.complex128")
+_F64_STRINGS = {"float64", "f8", "double", "complex128"}
+
+
+# ---------------------------------------------------------------------------
+# RL003 — host-side transfer smells in hot modules
+# ---------------------------------------------------------------------------
+
+def check_host_transfers(mi: ModuleIndex, blessed: set) -> list:
+    """``jax.device_get`` / ``.block_until_ready()`` outside blessed
+    qualnames. ``blessed`` is a set of function qualnames for this file
+    (a finding inside a blessed function, or nested under one, is the
+    declared fetch point itself)."""
+    out = []
+
+    def bless_covers(node) -> bool:
+        for fi in mi.funcs.values():
+            fn = fi.node
+            if (fn.lineno <= node.lineno
+                    <= getattr(fn, "end_lineno", fn.lineno)):
+                q = fi.qualname
+                if q in blessed or any(q.startswith(b + ".")
+                                       for b in blessed):
+                    return True
+        return False
+
+    for node in ast.walk(mi.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if resolves_to(mi, node.func, "jax.device_get"):
+            if not bless_covers(node):
+                out.append(Finding(
+                    "RL003", mi.path, node.lineno,
+                    "jax.device_get outside the blessed fetch points "
+                    "(declare it in compile_sites.toml "
+                    "[[blessed_transfer]] or route through the sweep "
+                    "fold fetch)"))
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "block_until_ready"):
+            if not bless_covers(node):
+                out.append(Finding(
+                    "RL003", mi.path, node.lineno,
+                    ".block_until_ready() is a host sync barrier in a "
+                    "hot-loop module (bless it or move it to the "
+                    "benchmark harness)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL005 — PRNG key discipline
+# ---------------------------------------------------------------------------
+
+class _KeyWalk:
+    def __init__(self, mi: ModuleIndex, path: str):
+        self.mi = mi
+        self.path = path
+        self.state: dict = {}        # name -> "fresh" | "consumed"
+        self.findings: list = []
+
+    def _is(self, call: ast.Call, dotted: tuple) -> bool:
+        return resolves_to(self.mi, call.func, *dotted)
+
+    def _key_args(self, call: ast.Call):
+        names = []
+        for a in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(a, ast.Name) and a.id in self.state:
+                names.append(a.id)
+        return names
+
+    # -- expression scan (in evaluation-ish order) -----------------------
+    def expr(self, e):
+        if e is None:
+            return
+        for child in ast.iter_child_nodes(e):
+            if isinstance(child, ast.expr) and not isinstance(
+                    e, ast.Call):
+                self.expr(child)
+        if isinstance(e, ast.Call):
+            for a in e.args:
+                self.expr(a)
+            for kw in e.keywords:
+                self.expr(kw.value)
+            if self._is(e, _SAMPLER_DOTTED):
+                keys = self._key_args(e)
+                for k in keys[:1]:   # first key-typed arg is the key
+                    if self.state.get(k) == "consumed":
+                        self.findings.append(Finding(
+                            "RL005", self.path, e.lineno,
+                            f"PRNG key {k!r} feeds a second sampling "
+                            "call without an intervening split/"
+                            "fold_in"))
+                    else:
+                        self.state[k] = "consumed"
+            elif self._is(e, _DERIVER_DOTTED):
+                pass                  # derivation: does not consume
+            else:
+                # opaque call: assume the callee may sample the key
+                for k in self._key_args(e):
+                    self.state[k] = "consumed"
+
+    # -- statements ------------------------------------------------------
+    def bind_fresh(self, target):
+        if isinstance(target, ast.Name):
+            self.state[target.id] = "fresh"
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for t in target.elts:
+                self.bind_fresh(t)
+        elif isinstance(target, ast.Starred):
+            self.bind_fresh(target.value)
+
+    def bind_clear(self, target):
+        if isinstance(target, ast.Name):
+            self.state.pop(target.id, None)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for t in target.elts:
+                self.bind_clear(t)
+        elif isinstance(target, ast.Starred):
+            self.bind_clear(target.value)
+
+    def stmts(self, body):
+        for s in body:
+            self.stmt(s)
+
+    def stmt(self, s):
+        if isinstance(s, (ast.Assign, ast.AnnAssign)):
+            v = s.value
+            self.expr(v)
+            targets = s.targets if isinstance(s, ast.Assign) else \
+                [s.target]
+            derive = isinstance(v, ast.Call) and \
+                self._is(v, _DERIVER_DOTTED)
+            alias = isinstance(v, ast.Name) and v.id in self.state
+            for t in targets:
+                if derive:
+                    self.bind_fresh(t)
+                elif alias and isinstance(t, ast.Name):
+                    self.state[t.id] = self.state[v.id]
+                else:
+                    self.bind_clear(t)
+        elif isinstance(s, ast.AugAssign):
+            self.expr(s.value)
+            self.bind_clear(s.target)
+        elif isinstance(s, (ast.If,)):
+            self.expr(s.test)
+            before = dict(self.state)
+            self.stmts(s.body)
+            after_body = self.state
+            self.state = dict(before)
+            self.stmts(s.orelse)
+            merged = {}
+            for k in set(after_body) | set(self.state):
+                a, b = after_body.get(k), self.state.get(k)
+                merged[k] = "consumed" if "consumed" in (a, b) else \
+                    (a or b)
+            self.state = merged
+        elif isinstance(s, (ast.For, ast.While)):
+            if isinstance(s, ast.For):
+                self.expr(s.iter)
+                self.bind_clear(s.target)
+            else:
+                self.expr(s.test)
+            # run the body twice: a key consumed on iteration 1 and
+            # sampled again on iteration 2 is the classic reuse bug
+            self.stmts(s.body)
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.Return):
+            self.expr(s.value)
+        elif isinstance(s, ast.Expr):
+            self.expr(s.value)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self.expr(item.context_expr)
+            self.stmts(s.body)
+        elif isinstance(s, ast.Try):
+            self.stmts(s.body)
+            for h in s.handlers:
+                self.stmts(h.body)
+            self.stmts(s.orelse)
+            self.stmts(s.finalbody)
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            pass                      # nested scopes walked separately
+
+
+def check_prng(mi: ModuleIndex) -> list:
+    out = []
+    seen = set()
+    for fi in mi.funcs.values():
+        node = fi.node
+        if isinstance(node, ast.Lambda):
+            continue
+        w = _KeyWalk(mi, mi.path)
+        for p in fi.params:
+            if _KEYISH.search(p):
+                w.state[p] = "fresh"
+        w.stmts(node.body)
+        for f in w.findings:
+            k = (f.rule, f.line, f.message)
+            if k not in seen:
+                seen.add(k)
+                out.append(f)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL006 — dtype discipline in bit-exact modules
+# ---------------------------------------------------------------------------
+
+def check_dtypes(mi: ModuleIndex) -> list:
+    out = []
+    for node in ast.walk(mi.tree):
+        if isinstance(node, ast.Attribute) and resolves_to(
+                mi, node, *_F64_ATTRS):
+            out.append(Finding(
+                "RL006", mi.path, node.lineno,
+                f"{dotted_name(node)} in a bit-exact module: results "
+                "must not depend on the x64 mode"))
+        elif isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg != "dtype":
+                    continue
+                v = kw.value
+                if isinstance(v, ast.Constant) and v.value in \
+                        _F64_STRINGS:
+                    out.append(Finding(
+                        "RL006", mi.path, node.lineno,
+                        f'dtype="{v.value}" in a bit-exact module'))
+                elif isinstance(v, ast.Name) and v.id == "float":
+                    out.append(Finding(
+                        "RL006", mi.path, node.lineno,
+                        "dtype=float resolves to float64 under x64 in "
+                        "a bit-exact module"))
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                a = node.args[0]
+                if isinstance(a, ast.Constant) and a.value in \
+                        _F64_STRINGS:
+                    out.append(Finding(
+                        "RL006", mi.path, node.lineno,
+                        f'.astype("{a.value}") in a bit-exact module'))
+    out.sort(key=lambda f: f.line)
+    return out

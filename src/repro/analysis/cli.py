@@ -1,0 +1,108 @@
+"""``python -m repro.analysis`` — the contract linter CLI.
+
+Exit status: 0 unless ``--check`` is given and unsuppressed findings
+remain (or the registry itself is unreadable). ``--json``/``--dead-code``
+write machine-readable reports under ``results/`` for the CI artifact
+upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .engine import run_lint
+from .findings import RULES
+from .reachability import dead_code_report
+from .registry import REGISTRY_RELPATH, load_config
+
+
+def find_root(start: Path | None = None) -> Path:
+    """Repo root = nearest ancestor holding the registry; falls back to
+    the source checkout this module sits in."""
+    cur = (start or Path.cwd()).resolve()
+    for p in [cur, *cur.parents]:
+        if (p / REGISTRY_RELPATH).is_file():
+            return p
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="contract-aware static analysis for the sweep "
+                    "engine (rules RL001-RL006; see ROADMAP 'Static "
+                    "contracts')")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: the registry's "
+                         "lint_scope)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any unsuppressed finding remains")
+    ap.add_argument("--json", nargs="?", metavar="PATH",
+                    const="results/analysis_report.json", default=None,
+                    help="write the machine-readable report "
+                         "(default %(const)s)")
+    ap.add_argument("--dead-code", action="store_true",
+                    help="also emit results/dead_code_report.json "
+                         "(module reachability from the bench/"
+                         "simulator roots)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-finding output")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root).resolve() if args.root else find_root()
+    try:
+        cfg = load_config(root)
+    except Exception as e:  # unreadable registry is itself a failure
+        print(f"error: cannot load {REGISTRY_RELPATH}: {e}",
+              file=sys.stderr)
+        return 2
+
+    rep = run_lint(root, cfg, args.paths or None)
+
+    if not args.quiet:
+        for f in rep.findings:
+            print(f.format())
+    by_rule = rep.by_rule()
+    parts = []
+    for rule in sorted(by_rule):
+        n = len(by_rule[rule])
+        ns = sum(1 for f in by_rule[rule] if not f.suppressed)
+        parts.append(f"{rule}:{ns}/{n}")
+    print(f"repro.analysis: {len(rep.files)} files, "
+          f"{len(rep.unsuppressed)} unsuppressed finding(s) "
+          f"({', '.join(parts) if parts else 'clean'}), "
+          f"{rep.suppression_count}/{rep.baseline} suppressions used")
+
+    if args.json:
+        out = root / args.json
+        out.parent.mkdir(parents=True, exist_ok=True)
+        payload = rep.to_json()
+        payload["rules"] = {r: {"name": n, "invariant": i}
+                            for r, (n, i) in RULES.items()}
+        out.write_text(json.dumps(payload, indent=2, sort_keys=True))
+        try:
+            shown = out.relative_to(root)
+        except ValueError:            # --json outside the repo root
+            shown = out
+        print(f"wrote {shown}")
+
+    if args.dead_code:
+        dc = dead_code_report(root, cfg.lint_exempt)
+        out = root / "results" / "dead_code_report.json"
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(dc, indent=2, sort_keys=True))
+        s = dc["summary"]
+        n_ex = sum(1 for u in dc["unreachable"] if u["exempt"])
+        print(f"dead-code: {s['n_reachable']}/{s['n_modules']} modules "
+              f"reachable; {s['n_unreachable']} unreachable "
+              f"({n_ex} exempt seed modules, "
+              f"{s['loc_unreachable']} LoC) -> "
+              f"{out.relative_to(root)}")
+
+    if args.check and rep.unsuppressed:
+        return 1
+    return 0

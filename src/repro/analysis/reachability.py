@@ -1,0 +1,137 @@
+"""--dead-code: module-level reachability over the repro import graph.
+
+Roots are the things that actually execute: every ``benchmarks/*.py``
+and ``examples/*.py`` entry point, ``repro.core.simulator`` (the
+library surface ``run_sweep``/``run_sim`` callers import), and the
+linter's own ``python -m repro.analysis`` entry. Tests are
+deliberately NOT roots — a module only a test imports is exactly the
+inventory this report exists to surface.
+
+The seed trees that predate the simulator (models/, optim/, configs/,
+train/, serving/, distributed/) are expected to show up unreachable;
+they are marked ``exempt`` (mirroring the registry's lint_exempt
+list) rather than deleted — models/attention.py and models/rwkv6.py
+are the exception and stay reachable as the kernel oracles via
+kernels/ref.py.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+
+def _modname(path: Path, src: Path) -> str:
+    rel = path.relative_to(src).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _repro_imports(tree: ast.Module, cur_mod: str, known: set) -> set:
+    out = set()
+
+    def add(name: str):
+        # an import of a package also executes its __init__; an
+        # imported symbol may itself be a submodule
+        if name in known:
+            out.add(name)
+        parts = name.split(".")
+        for i in range(1, len(parts)):
+            pkg = ".".join(parts[:i])
+            if pkg in known:
+                out.add(pkg)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[0] == "repro":
+                    add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:
+                parent = cur_mod.split(".")
+                parent = parent[:len(parent) - node.level]
+                base = ".".join(parent + ([base] if base else []))
+            if base.split(".")[0] != "repro":
+                continue
+            add(base)
+            for a in node.names:
+                add(f"{base}.{a.name}")
+    return out
+
+
+def dead_code_report(root: Path, exempt_trees: list) -> dict:
+    src = root / "src"
+    files = {}
+    for p in sorted((src / "repro").rglob("*.py")):
+        files[_modname(p, src)] = p
+    known = set(files)
+
+    edges = {}
+    for mod, p in files.items():
+        try:
+            tree = ast.parse(p.read_text())
+        except SyntaxError:
+            edges[mod] = set()
+            continue
+        edges[mod] = _repro_imports(tree, mod, known)
+
+    # simulator = the library surface; __main__ = `python -m
+    # repro.analysis`; sanitizer = the conftest-wired runtime leg
+    roots = {"repro.core.simulator", "repro.analysis.__main__",
+             "repro.analysis.sanitizer"}
+    bench_files = []
+    for dirname in ("benchmarks", "examples"):
+        d = root / dirname
+        if not d.is_dir():
+            continue
+        for p in sorted(d.glob("*.py")):
+            bench_files.append(p.relative_to(root).as_posix())
+            try:
+                tree = ast.parse(p.read_text())
+            except SyntaxError:
+                continue
+            roots |= _repro_imports(tree, "", known)
+    roots &= known
+
+    reachable = set()
+    work = sorted(roots)
+    while work:
+        m = work.pop()
+        if m in reachable:
+            continue
+        reachable.add(m)
+        work.extend(edges.get(m, ()))
+
+    def relpath(mod):
+        return files[mod].relative_to(root).as_posix()
+
+    def is_exempt(mod):
+        rp = relpath(mod)
+        return any(rp.startswith(e.rstrip("/") + "/") or rp == e
+                   for e in exempt_trees)
+
+    unreachable = []
+    loc_dead = 0
+    for mod in sorted(known - reachable):
+        loc = len(files[mod].read_text().splitlines())
+        loc_dead += loc
+        unreachable.append({"module": mod, "path": relpath(mod),
+                            "loc": loc, "exempt": is_exempt(mod)})
+    exempt_but_reachable = sorted(
+        mod for mod in reachable if is_exempt(mod))
+
+    return {
+        "roots": sorted(roots),
+        "bench_entry_points": bench_files,
+        "reachable": {m: relpath(m) for m in sorted(reachable)},
+        "unreachable": unreachable,
+        "exempt_but_reachable": exempt_but_reachable,
+        "summary": {
+            "n_modules": len(known),
+            "n_reachable": len(reachable),
+            "n_unreachable": len(unreachable),
+            "loc_unreachable": loc_dead,
+        },
+    }

@@ -1,0 +1,364 @@
+"""The checked-in contract registry (compile_sites.toml) and the two
+checkers that diff it against the tree: RL002 (compile sites) and
+RL004 (scenario-leaf sync).
+
+compile_sites.toml is the single declarative home for:
+
+* ``[analysis]``   — lint scope, hot/bit-exact module lists, exempt
+  trees, and the suppression-count baseline;
+* ``[[compile_site]]`` — every ``jit``/``pallas_call``/``lax.scan``
+  callsite with its expected trace multiplicity (free prose, but it
+  must be non-empty: a registered site with no stated multiplicity is
+  itself RL002);
+* ``[trace_count]`` — which functions carry the ``TRACE_COUNT += 1``
+  probe, cross-checked against the code so the registry can never
+  drift from the pin;
+* ``[[blessed_transfer]]`` — the fetch points RL003 exempts (the same
+  fetches HOST_TRANSFER_COUNT counts);
+* ``[scenario_contract]`` + ``[[validation_exempt]]`` — the Scenario /
+  SimParams field inventory RL004 enforces.
+
+Adding a compile site, a host fetch, or a scenario knob without the
+matching registry edit is a finding — the registry diff IS the review
+artifact.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+
+from . import toml_lite
+from .astutil import ModuleIndex, Project, dotted_name, resolves_to
+from .findings import Finding
+
+REGISTRY_RELPATH = "src/repro/analysis/compile_sites.toml"
+
+
+@dataclass
+class Config:
+    raw: dict
+    root: Path
+
+    @property
+    def analysis(self) -> dict:
+        return self.raw.get("analysis", {})
+
+    @property
+    def lint_scope(self) -> list:
+        return self.analysis.get("lint_scope", [])
+
+    @property
+    def hot_modules(self) -> list:
+        return self.analysis.get("hot_modules", [])
+
+    @property
+    def bitexact_modules(self) -> list:
+        return self.analysis.get("bitexact_modules", [])
+
+    @property
+    def lint_exempt(self) -> list:
+        return self.analysis.get("lint_exempt", [])
+
+    @property
+    def max_suppressions(self) -> int:
+        return int(self.analysis.get("max_suppressions", 0))
+
+    def blessed(self, relpath: str) -> set:
+        return {b["qualname"] for b in self.raw.get("blessed_transfer",
+                                                    [])
+                if b.get("file") == relpath}
+
+    def is_exempt(self, relpath: str) -> bool:
+        return any(relpath == e or relpath.startswith(e.rstrip("/") +
+                                                      "/")
+                   for e in self.lint_exempt)
+
+
+def load_config(root: Path, path: Path | None = None) -> Config:
+    p = path or (root / REGISTRY_RELPATH)
+    return Config(raw=toml_lite.load(p), root=root)
+
+
+# ---------------------------------------------------------------------------
+# RL002 — compile-site registry
+# ---------------------------------------------------------------------------
+
+_KIND_NAMES = {
+    "jit": ("jax.jit",),
+    "pallas_call": ("jax.experimental.pallas.pallas_call",),
+    "scan": ("jax.lax.scan",),
+}
+
+
+def _enclosing_qualname(mi: ModuleIndex, node) -> str:
+    # innermost enclosing *def* — a lambda handed to scan is not a
+    # registry address, its defining function is
+    best = None
+    for fi in mi.funcs.values():
+        fn = fi.node
+        if isinstance(fn, ast.Lambda):
+            continue
+        if fn.lineno <= node.lineno <= getattr(fn, "end_lineno",
+                                               fn.lineno):
+            if best is None or fn.lineno >= best.node.lineno:
+                best = fi
+    return best.qualname if best else "<module>"
+
+
+def discover_compile_sites(mi: ModuleIndex):
+    """Yield (qualname, kind, line) for each jit/pallas/scan site."""
+    dec_nodes = set()
+    for fi in mi.funcs.values():
+        node = fi.node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            dec_nodes.update(id(n) for n in ast.walk(dec))
+            is_jit = resolves_to(mi, dec, "jax.jit")
+            if isinstance(dec, ast.Call):
+                if resolves_to(mi, dec.func, "jax.jit"):
+                    is_jit = True
+                elif (resolves_to(mi, dec.func, "functools.partial")
+                      and dec.args
+                      and resolves_to(mi, dec.args[0], "jax.jit")):
+                    is_jit = True
+            if is_jit:
+                yield fi.qualname, "jit", dec.lineno
+    for node in ast.walk(mi.tree):
+        if not isinstance(node, ast.Call) or id(node) in dec_nodes:
+            continue
+        for kind, names in _KIND_NAMES.items():
+            if resolves_to(mi, node.func, *names):
+                yield _enclosing_qualname(mi, node), kind, node.lineno
+                break
+
+
+def _trace_probe_qualnames(mi: ModuleIndex) -> set:
+    """Functions containing a ``TRACE_COUNT += 1`` probe."""
+    out = set()
+    for node in ast.walk(mi.tree):
+        if (isinstance(node, ast.AugAssign)
+                and isinstance(node.target, ast.Name)
+                and node.target.id == "TRACE_COUNT"):
+            out.add(_enclosing_qualname(mi, node))
+    return out
+
+
+def check_registry(proj: Project, cfg: Config) -> list:
+    out = []
+    entries = cfg.raw.get("compile_site", [])
+    declared = {}
+    for i, e in enumerate(entries):
+        key = (e.get("file", ""), e.get("qualname", ""),
+               e.get("kind", ""))
+        if not all(key):
+            out.append(Finding(
+                "RL002", REGISTRY_RELPATH, 1,
+                f"compile_site entry #{i + 1} is missing "
+                "file/qualname/kind"))
+            continue
+        if key in declared:
+            out.append(Finding(
+                "RL002", REGISTRY_RELPATH, 1,
+                f"duplicate compile_site entry {key}"))
+        declared[key] = e
+        if not str(e.get("multiplicity", "")).strip():
+            out.append(Finding(
+                "RL002", REGISTRY_RELPATH, 1,
+                f"compile_site {key} declares no trace multiplicity"))
+
+    matched = set()
+    for mi in proj.modules.values():
+        for qualname, kind, line in discover_compile_sites(mi):
+            key = (mi.path, qualname, kind)
+            if key in declared:
+                matched.add(key)
+            else:
+                out.append(Finding(
+                    "RL002", mi.path, line,
+                    f"unregistered {kind} compile site in {qualname} "
+                    "(declare it in analysis/compile_sites.toml with "
+                    "its expected trace multiplicity)"))
+    for key in declared:
+        if key not in matched and proj.by_path(key[0]) is not None:
+            out.append(Finding(
+                "RL002", REGISTRY_RELPATH, 1,
+                f"registry drift: declared compile site {key} no "
+                "longer exists in the code"))
+
+    tc = cfg.raw.get("trace_count", {})
+    tc_file = tc.get("file")
+    if tc_file:
+        mi = proj.by_path(tc_file)
+        if mi is not None:
+            actual = _trace_probe_qualnames(mi)
+            want = set(tc.get("counted_fns", []))
+            for q in actual - want:
+                out.append(Finding(
+                    "RL002", tc_file, 1,
+                    f"TRACE_COUNT probe in {q} is not declared in "
+                    "[trace_count] counted_fns (registry drift vs the "
+                    "trace pin)"))
+            for q in want - actual:
+                out.append(Finding(
+                    "RL002", REGISTRY_RELPATH, 1,
+                    f"[trace_count] declares {q} but no TRACE_COUNT "
+                    "probe exists there"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RL004 — scenario-leaf sync
+# ---------------------------------------------------------------------------
+
+def _class_fields(cls: ast.ClassDef) -> dict:
+    """AnnAssign field name -> line for a NamedTuple/dataclass body."""
+    return {s.target.id: s.lineno for s in cls.body
+            if isinstance(s, ast.AnnAssign)
+            and isinstance(s.target, ast.Name)}
+
+
+def _module_assign(mi: ModuleIndex, name: str):
+    for node in mi.tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return node
+    return None
+
+
+def check_scenario_contract(proj: Project, cfg: Config) -> list:
+    out = []
+    sc = cfg.raw.get("scenario_contract")
+    if not sc:
+        # mini-configs (the analyzer's own test fixtures) may opt out;
+        # the real registry must carry the table
+        if cfg.analysis.get("require_scenario_contract", True):
+            return [Finding("RL004", REGISTRY_RELPATH, 1,
+                            "missing [scenario_contract] table")]
+        return []
+    mi = proj.by_path(sc.get("file", ""))
+    if mi is None:
+        return [Finding("RL004", REGISTRY_RELPATH, 1,
+                        f"scenario_contract.file {sc.get('file')!r} is "
+                        "not in the lint scope")]
+
+    classes = {n.name: n for n in mi.tree.body
+               if isinstance(n, ast.ClassDef)}
+    scen_cls = classes.get(sc.get("scenario_class", "Scenario"))
+    par_cls = classes.get(sc.get("params_class", "SimParams"))
+
+    # 1. Scenario leaves <-> contract inventory
+    if scen_cls is None:
+        out.append(Finding("RL004", mi.path, 1,
+                           "scenario class not found"))
+    else:
+        actual = _class_fields(scen_cls)
+        want = set(sc.get("scenario_fields", []))
+        for f in sorted(set(actual) - want):
+            out.append(Finding(
+                "RL004", mi.path, actual[f],
+                f"Scenario leaf {f!r} is not in the contract's "
+                "scenario_fields (new knob: register it AND bump "
+                "schema_version)"))
+        for f in sorted(want - set(actual)):
+            out.append(Finding(
+                "RL004", REGISTRY_RELPATH, 1,
+                f"contract lists scenario field {f!r} that Scenario no "
+                "longer has"))
+        # every leaf must be consumed somewhere outside the class body
+        reads = {n.attr for n in ast.walk(mi.tree)
+                 if isinstance(n, ast.Attribute)
+                 and not (scen_cls.lineno <= n.lineno
+                          <= scen_cls.end_lineno)}
+        for f, line in actual.items():
+            if f in want and f not in reads:
+                out.append(Finding(
+                    "RL004", mi.path, line,
+                    f"Scenario leaf {f!r} is never read in the "
+                    "simulator (dead knob)"))
+
+    # 2. schema version pin
+    ver_node = _module_assign(mi, sc.get("schema_version_name",
+                                         "SIM_SCHEMA_VERSION"))
+    if ver_node is None:
+        out.append(Finding("RL004", mi.path, 1,
+                           "SIM_SCHEMA_VERSION assignment not found"))
+    elif isinstance(ver_node.value, ast.Constant):
+        if ver_node.value.value != sc.get("schema_version"):
+            out.append(Finding(
+                "RL004", mi.path, ver_node.lineno,
+                f"SIM_SCHEMA_VERSION is {ver_node.value.value} but the "
+                f"contract pins {sc.get('schema_version')} (bump both "
+                "together)"))
+
+    # 3. fingerprint knobs == FAULT_KNOBS literal
+    fk_node = _module_assign(mi, sc.get("fingerprint_name",
+                                        "FAULT_KNOBS"))
+    if fk_node is None:
+        out.append(Finding("RL004", mi.path, 1,
+                           "FAULT_KNOBS assignment not found"))
+    else:
+        lits = [e.value for e in ast.walk(fk_node.value)
+                if isinstance(e, ast.Constant)
+                and isinstance(e.value, str)]
+        if lits != list(sc.get("fingerprint_params", [])):
+            out.append(Finding(
+                "RL004", mi.path, fk_node.lineno,
+                f"FAULT_KNOBS {tuple(lits)} != contract "
+                f"fingerprint_params "
+                f"{tuple(sc.get('fingerprint_params', []))} — the "
+                "cache fingerprint and the registry must move "
+                "together"))
+
+    # 4. SimParams validation table
+    if par_cls is None:
+        out.append(Finding("RL004", mi.path, 1,
+                           "params class not found"))
+        return out
+    actual_p = _class_fields(par_cls)
+    validated = set(sc.get("validated_params", []))
+    exempt = {e["field"]: e for e in cfg.raw.get("validation_exempt",
+                                                 [])}
+    for f, e in exempt.items():
+        if not str(e.get("reason", "")).strip():
+            out.append(Finding(
+                "RL004", REGISTRY_RELPATH, 1,
+                f"validation_exempt entry {f!r} carries no reason"))
+    post = None
+    for n in par_cls.body:
+        if isinstance(n, ast.FunctionDef) and n.name == "__post_init__":
+            post = n
+    post_reads = set()
+    if post is not None:
+        post_reads = {a.attr for a in ast.walk(post)
+                      if isinstance(a, ast.Attribute)
+                      and isinstance(a.value, ast.Name)
+                      and a.value.id == "self"}
+    for f, line in actual_p.items():
+        if f in validated:
+            if f not in post_reads:
+                out.append(Finding(
+                    "RL004", mi.path, line,
+                    f"SimParams.{f} is declared validated but "
+                    "__post_init__ never checks it"))
+        elif f not in exempt:
+            out.append(Finding(
+                "RL004", mi.path, line,
+                f"SimParams.{f} is in neither validated_params nor "
+                "[[validation_exempt]] — every knob needs a range "
+                "check or a stated exemption"))
+    for f in sorted((validated | set(exempt)) - set(actual_p)):
+        out.append(Finding(
+            "RL004", REGISTRY_RELPATH, 1,
+            f"contract mentions SimParams field {f!r} that no longer "
+            "exists"))
+    # every fingerprint knob must be a real SimParams field
+    for f in sc.get("fingerprint_params", []):
+        if f not in actual_p:
+            out.append(Finding(
+                "RL004", REGISTRY_RELPATH, 1,
+                f"fingerprint_params lists {f!r} which is not a "
+                "SimParams field"))
+    return out

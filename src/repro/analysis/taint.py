@@ -1,0 +1,506 @@
+"""Traced-value taint analysis for RL001/RL003.
+
+Roots: every function handed to ``jax.jit`` / ``pl.pallas_call`` /
+``jax.lax.scan|cond|while_loop|fori_loop`` / ``jax.vmap`` (as a
+decorator or a callsite argument, possibly wrapped in
+``functools.partial``). Parameters bound statically — ``static_argnames``
+on jit, kwargs/leading positionals bound by ``partial`` on a pallas
+kernel — start untainted; everything else a root receives is a traced
+value.
+
+Propagation is interprocedural to a fixpoint: when a traced function
+passes a tainted value into another function the linter can resolve,
+that callee joins the traced-reachable set with those parameters
+tainted. Taint sets only grow, so the worklist terminates.
+
+Untaint rules (the false-positive killers, each one load-bearing for
+the shipped tree):
+
+* ``x is None`` / ``x is not None`` comparisons are static — the
+  None-ness of a traced argument is part of the trace signature;
+* ``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` reads are static
+  metadata;
+* ``len()``, ``isinstance()``, ``type()``, ``range()`` results are
+  static.
+
+Within traced-reachable functions the engine emits:
+
+* RL001 for ``if``/``while``/``assert``/ternary tests on tainted
+  values and for ``float()/int()/bool()/complex()`` or
+  ``.item()/.tolist()`` coercions of tainted values;
+* RL003 for ``np.asarray``/``np.array`` over tainted values and for
+  ``for``-loops iterating the result of a jnp/jax call (array
+  ``__iter__`` unrolls at trace time: a hidden transfer + shape-many
+  retraces).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .astutil import (FuncInfo, ModuleIndex, Project, dotted_name,
+                      resolves_to)
+from .findings import Finding
+
+_JIT = ("jax.jit",)
+_PALLAS = ("jax.experimental.pallas.pallas_call",)
+_SCAN = ("jax.lax.scan",)
+_ONE_FN = {  # transform dotted name -> positions of function-valued args
+    "jax.jit": (0,), "jax.vmap": (0,), "jax.grad": (0,),
+    "jax.value_and_grad": (0,), "jax.checkpoint": (0,),
+    "jax.remat": (0,), "jax.pmap": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+    "jax.lax.scan": (0,), "jax.lax.map": (0,),
+    "jax.lax.cond": (1, 2), "jax.lax.switch": (),  # branches = list arg
+    "jax.lax.while_loop": (0, 1), "jax.lax.fori_loop": (2,),
+    "jax.lax.associative_scan": (0,),
+}
+_STATIC_META = {"shape", "ndim", "dtype", "size"}
+_STATIC_CALLS = {"len", "isinstance", "type", "range", "hasattr",
+                 "enumerate", "zip", "sorted", "list", "tuple", "dict",
+                 "set", "min", "max"}
+# min/max/list/... of a tainted value IS tainted-ish, but branch-on-it
+# is what RL001 cares about and those appear over static shape math in
+# this tree; keep them static except the true coercions below
+_COERCE_CALLS = {"float", "int", "bool", "complex"}
+_COERCE_METHODS = {"item", "tolist"}
+
+
+@dataclass
+class TaintResult:
+    findings: list = field(default_factory=list)
+    #: (modname, qualname) -> set of tainted parameter names
+    traced: dict = field(default_factory=dict)
+
+    def is_traced(self, fi: FuncInfo) -> bool:
+        return fi.key() in self.traced
+
+
+def _str_elems(node) -> set:
+    """Collect string constants from a Constant/Tuple/List expr."""
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.add(n.value)
+    return out
+
+
+def _own_returns(fnode):
+    """Return statements of a def, skipping nested function bodies."""
+    out = []
+
+    def scan(body):
+        for s in body:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                continue
+            if isinstance(s, ast.Return):
+                out.append(s)
+            for attr in ("body", "orelse", "finalbody"):
+                sub = getattr(s, attr, None)
+                if isinstance(sub, list):
+                    scan(sub)
+            for h in getattr(s, "handlers", []):
+                scan(h.body)
+
+    scan(fnode.body)
+    return out
+
+
+def _func_from_expr(expr, scope, mi: ModuleIndex, proj: Project,
+                    depth: int = 0):
+    """Resolve a function-valued expression to (FuncInfo, static_params).
+
+    Peels ``functools.partial`` (bound kwargs and leading positionals
+    become static params) and nested transform wrappers like
+    ``jax.jit(partial(f, ...))``; follows local aliases
+    (``step = make_sim_step(hull)``) and closure factories (a project
+    function whose return value is one of its own nested defs), so the
+    simulator's ``jax.vmap(make_sim_step(...))`` hot step is rooted.
+    """
+    if depth > 8:
+        return None, set()
+    if isinstance(expr, ast.Lambda):
+        return mi.func_of_node(expr), set()
+    if isinstance(expr, (ast.Name, ast.Attribute)):
+        fi = proj.resolve_call(expr, scope, mi)
+        if fi is not None:
+            return fi, set()
+        if isinstance(expr, ast.Name):
+            f = scope
+            while f is not None:
+                for node in ast.walk(f.node):
+                    if (isinstance(node, ast.Assign)
+                            and len(node.targets) == 1
+                            and isinstance(node.targets[0], ast.Name)
+                            and node.targets[0].id == expr.id):
+                        got, st = _func_from_expr(node.value, f, mi,
+                                                  proj, depth + 1)
+                        if got is not None:
+                            return got, st
+                f = f.parent
+        return None, set()
+    if isinstance(expr, ast.Call):
+        if resolves_to(mi, expr.func, "functools.partial") and expr.args:
+            fi, statics = _func_from_expr(expr.args[0], scope, mi, proj,
+                                          depth + 1)
+            if fi is not None:
+                statics = set(statics)
+                statics |= {kw.arg for kw in expr.keywords if kw.arg}
+                n_pos = len(expr.args) - 1
+                statics |= set(fi.params[:n_pos])
+            return fi, statics
+        if any(resolves_to(mi, expr.func, t) for t in _ONE_FN
+               ) and expr.args:
+            return _func_from_expr(expr.args[0], scope, mi, proj,
+                                   depth + 1)
+        # closure factory: f() returning one of f's own nested defs
+        target = proj.resolve_call(expr.func, scope, mi)
+        if target is not None and isinstance(
+                target.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for ret in _own_returns(target.node):
+                if (isinstance(ret.value, ast.Name)
+                        and ret.value.id in target.children):
+                    return target.children[ret.value.id], set()
+    return None, set()
+
+
+def _transform_target(mi, call: ast.Call):
+    """Dotted transform name if this call is a jax transform we root."""
+    for t in _ONE_FN:
+        if resolves_to(mi, call.func, t):
+            return t
+    return None
+
+
+def discover_roots(proj: Project):
+    """Yield (FuncInfo, tainted_param_names) for every traced root."""
+    for mi in proj.modules.values():
+        # decorator roots
+        for fi in mi.funcs.values():
+            node = fi.node
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                statics = set()
+                is_root = resolves_to(mi, dec, *_JIT)
+                if isinstance(dec, ast.Call) and resolves_to(
+                        mi, dec.func, *_JIT, "functools.partial"):
+                    inner_jit = resolves_to(mi, dec.func, *_JIT)
+                    part_jit = (resolves_to(mi, dec.func,
+                                            "functools.partial")
+                                and dec.args
+                                and resolves_to(mi, dec.args[0], *_JIT))
+                    if inner_jit or part_jit:
+                        is_root = True
+                        for kw in dec.keywords:
+                            if kw.arg in ("static_argnames",
+                                          "static_argnums"):
+                                statics |= _str_elems(kw.value)
+                if is_root:
+                    yield fi, set(fi.params) - statics
+        # callsite roots
+        for fnode in ast.walk(mi.tree):
+            if not isinstance(fnode, ast.Call):
+                continue
+            t = _transform_target(mi, fnode)
+            if t is None:
+                continue
+            scope = _enclosing(mi, fnode)
+            statics = set()
+            if t == "jax.jit":
+                for kw in fnode.keywords:
+                    if kw.arg == "static_argnames":
+                        statics |= _str_elems(kw.value)
+            for pos in _ONE_FN[t]:
+                if pos >= len(fnode.args):
+                    continue
+                fi, pstat = _func_from_expr(fnode.args[pos], scope, mi,
+                                            proj)
+                if fi is not None:
+                    yield fi, set(fi.params) - statics - pstat
+
+
+def _enclosing(mi: ModuleIndex, node) -> FuncInfo | None:
+    """Innermost FuncInfo whose node contains ``node`` (by position)."""
+    best = None
+    for fi in mi.funcs.values():
+        fn = fi.node
+        if (fn.lineno <= node.lineno <= getattr(fn, "end_lineno",
+                                                fn.lineno)):
+            if best is None or fn.lineno >= best.node.lineno:
+                best = fi
+    return best
+
+
+class _Engine:
+    """One pass of the per-function taint walk (RL001/RL003-traced)."""
+
+    def __init__(self, fi: FuncInfo, tainted: set, proj: Project,
+                 on_call, emit):
+        self.fi = fi
+        self.mi = fi.module
+        self.tainted = set(tainted)
+        self.proj = proj
+        self.on_call = on_call
+        self.emit = emit
+
+    # ---- expression taint ----------------------------------------------
+    def tval(self, e) -> bool:
+        if e is None or isinstance(e, ast.Constant):
+            return False
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr in _STATIC_META:
+                self.tval(e.value)
+                return False
+            return self.tval(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.tval(e.value) | self.tval(e.slice)
+        if isinstance(e, ast.Compare):
+            operand_taint = self.tval(e.left) | any(
+                self.tval(c) for c in e.comparators)
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops):
+                return False          # None-ness is trace-static
+            return operand_taint
+        if isinstance(e, ast.BoolOp):
+            return any(self.tval(v) for v in e.values)
+        if isinstance(e, ast.BinOp):
+            return self.tval(e.left) | self.tval(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.tval(e.operand)
+        if isinstance(e, ast.IfExp):
+            if self.tval(e.test):
+                self.emit("RL001", e.lineno,
+                          "ternary condition on a traced value in "
+                          f"traced function {self.fi.qualname}")
+            return self.tval(e.body) | self.tval(e.orelse)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.tval(x) for x in e.elts)
+        if isinstance(e, ast.Dict):
+            return any(self.tval(k) for k in e.keys if k is not None) | \
+                any(self.tval(v) for v in e.values)
+        if isinstance(e, ast.Starred):
+            return self.tval(e.value)
+        if isinstance(e, ast.JoinedStr):
+            return any(self.tval(v) for v in e.values)
+        if isinstance(e, ast.FormattedValue):
+            return self.tval(e.value)
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                          ast.DictComp)):
+            t = False
+            for gen in e.generators:
+                t |= self.tval(gen.iter)
+                for cond in gen.ifs:
+                    if self.tval(cond):
+                        self.emit("RL001", cond.lineno,
+                                  "comprehension filter on a traced "
+                                  "value in traced function "
+                                  f"{self.fi.qualname}")
+            if isinstance(e, ast.DictComp):
+                t |= self.tval(e.key) | self.tval(e.value)
+            else:
+                t |= self.tval(e.elt)
+            return t
+        if isinstance(e, ast.Call):
+            return self.call(e)
+        if isinstance(e, ast.Lambda):
+            return False
+        if isinstance(e, ast.NamedExpr):
+            t = self.tval(e.value)
+            self.bind(e.target, t)
+            return t
+        # conservative default: tainted if any child expression is
+        return any(self.tval(c) for c in ast.iter_child_nodes(e)
+                   if isinstance(c, ast.expr))
+
+    # ---- calls ----------------------------------------------------------
+    def call(self, e: ast.Call) -> bool:
+        arg_taints = [self.tval(a) for a in e.args]
+        kw_taints = {kw.arg: self.tval(kw.value) for kw in e.keywords}
+        any_taint = any(arg_taints) or any(kw_taints.values())
+
+        fname = e.func.id if isinstance(e.func, ast.Name) else None
+        if fname in _STATIC_CALLS:
+            return False
+        if fname in _COERCE_CALLS and any_taint:
+            self.emit("RL001", e.lineno,
+                      f"{fname}() coerces a traced value to host "
+                      f"Python in traced function {self.fi.qualname}")
+            return False
+        if isinstance(e.func, ast.Attribute):
+            if e.func.attr in _COERCE_METHODS and self.tval(e.func.value):
+                self.emit("RL001", e.lineno,
+                          f".{e.func.attr}() pulls a traced value to "
+                          "host in traced function "
+                          f"{self.fi.qualname}")
+                return False
+            if e.func.attr in ("asarray", "array") and resolves_to(
+                    self.mi, e.func, "numpy.asarray", "numpy.array"):
+                if any_taint:
+                    self.emit("RL003", e.lineno,
+                              "np." + e.func.attr + " on a traced value"
+                              " forces a device->host transfer inside "
+                              f"traced function {self.fi.qualname}")
+                return any_taint
+            self.tval(e.func.value)
+
+        # interprocedural propagation into resolvable project callees
+        # (including local aliases / closure-factory results)
+        target, _ = _func_from_expr(e.func, self.fi, self.mi, self.proj)
+        if target is not None and target.key() != self.fi.key():
+            params = target.params
+            hit = set()
+            for i, t in enumerate(arg_taints):
+                if t and i < len(params):
+                    hit.add(params[i])
+            for k, t in kw_taints.items():
+                if t and k in params:
+                    hit.add(k)
+            if hit:
+                self.on_call(target, hit)
+        return any_taint
+
+    # ---- statements -----------------------------------------------------
+    def bind(self, target, tainted: bool):
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for t in target.elts:
+                self.bind(t, tainted)
+        elif isinstance(target, ast.Starred):
+            self.bind(target.value, tainted)
+        elif isinstance(target, (ast.Attribute, ast.Subscript)):
+            self.tval(target.value)
+
+    def stmts(self, body):
+        for s in body:
+            self.stmt(s)
+
+    def stmt(self, s):
+        if isinstance(s, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = s.value
+            t = self.tval(value) if value is not None else False
+            targets = s.targets if isinstance(s, ast.Assign) else \
+                [s.target]
+            if isinstance(s, ast.AugAssign):
+                t = t or self.tval(s.target)
+            for tgt in targets:
+                self.bind(tgt, t)
+        elif isinstance(s, ast.If):
+            if self.tval(s.test):
+                self.emit("RL001", s.test.lineno,
+                          "if-statement on a traced value in traced "
+                          f"function {self.fi.qualname}")
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.While):
+            if self.tval(s.test):
+                self.emit("RL001", s.test.lineno,
+                          "while-loop on a traced value in traced "
+                          f"function {self.fi.qualname}")
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.Assert):
+            if self.tval(s.test):
+                self.emit("RL001", s.lineno,
+                          "assert on a traced value in traced function "
+                          f"{self.fi.qualname} (use checkify or a "
+                          "validate gate)")
+        elif isinstance(s, ast.For):
+            it = s.iter
+            if isinstance(it, ast.Call):
+                dn = dotted_name(it.func) or ""
+                head = dn.split(".")[0]
+                real = self.fi.module.imports.get(head, "")
+                frm = self.fi.module.from_imports.get(head, "")
+                if (real.startswith("jax") or frm.startswith("jax")
+                        or head == "jax"):
+                    self.emit("RL003", s.lineno,
+                              "iterating a jax array unrolls via host "
+                              "__iter__ (one transfer per element) in "
+                              f"{self.fi.qualname}")
+            self.bind(s.target, self.tval(it))
+            self.stmts(s.body)
+            self.stmts(s.orelse)
+        elif isinstance(s, ast.Return):
+            self.tval(s.value)
+        elif isinstance(s, ast.Expr):
+            self.tval(s.value)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                t = self.tval(item.context_expr)
+                if item.optional_vars is not None:
+                    self.bind(item.optional_vars, t)
+            self.stmts(s.body)
+        elif isinstance(s, ast.Try):
+            self.stmts(s.body)
+            for h in s.handlers:
+                self.stmts(h.body)
+            self.stmts(s.orelse)
+            self.stmts(s.finalbody)
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            pass   # nested defs are analyzed when rooted or called
+        elif isinstance(s, (ast.Raise,)):
+            if s.exc is not None:
+                self.tval(s.exc)
+        # Pass/Break/Continue/Import/Global/Nonlocal/Delete: no taint
+
+    def run(self):
+        node = self.fi.node
+        body = node.body if not isinstance(node, ast.Lambda) else None
+        # two passes so names assigned late but used early (rare, but
+        # loops reorder) settle; taint only grows within a run
+        for _ in range(2):
+            if body is None:
+                self.tval(node.body)
+            else:
+                self.stmts(body)
+        return self.tainted
+
+
+def analyze(proj: Project) -> TaintResult:
+    res = TaintResult()
+    seen_findings = set()
+    state: dict = {}          # key -> set of tainted params
+    processed: set = set()
+    work: list = []
+    by_key = {fi.key(): fi for fi in proj.iter_functions()}
+
+    def ensure(fi: FuncInfo, params: set):
+        key = fi.key()
+        cur = state.setdefault(key, set())
+        grew = not params <= cur
+        cur |= params
+        if grew or key not in processed:
+            if key not in [k for k, _ in work]:
+                work.append((key, fi))
+
+    for fi, params in discover_roots(proj):
+        ensure(fi, params)
+
+    rounds = 0
+    while work and rounds < 10_000:
+        rounds += 1
+        key, fi = work.pop(0)
+        processed.add(key)
+
+        def emit(rule, line, msg, _fi=fi):
+            f = Finding(rule, _fi.module.path, line, msg)
+            if (rule, f.path, line, msg) not in seen_findings:
+                seen_findings.add((rule, f.path, line, msg))
+                res.findings.append(f)
+
+        eng = _Engine(fi, state[key], proj, ensure, emit)
+        eng.run()
+
+    res.traced = {k: set(v) for k, v in state.items()}
+    res.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return res

@@ -210,6 +210,13 @@ SIM_SCHEMA_VERSION = 6
 #: number of times the sweep step has been traced (the one-compile probe)
 TRACE_COUNT = 0
 
+#: optional per-trace attribution seam: when set to a callable it is
+#: invoked with the static ``site`` hull at every sweep-step trace
+#: (same trace-time-only side effect as TRACE_COUNT). The runtime
+#: sanitizer (repro.analysis.sanitizer.TraceLedger) uses it to pin the
+#: planner pipeline's one-trace-per-bucket contract per hull tag.
+TRACE_HOOK = None
+
 #: number of accumulator host transfers the sweep engine has performed
 #: (``device_get`` of fold buffers / in-scan accumulators). The
 #: device-resident fold path does exactly ONE per run_sweep (one per
@@ -1186,6 +1193,8 @@ def _sweep_chunk_impl(site: FBSite, scen: Scenario, state: SimState,
                       tol=None, validate: bool = False):
     global TRACE_COUNT
     TRACE_COUNT += 1          # python side effect: counts traces only
+    if TRACE_HOOK is not None:
+        TRACE_HOOK(site)      # trace-time attribution (sanitizer seam)
     step = make_sim_step(site)
     vstep = jax.vmap(step)
 
@@ -1762,6 +1771,7 @@ def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
                               state, None, length=n_ticks)
         return out
 
+    # repro-lint: disable=RL003(single-scenario debug path: one fetch per run_sim call, outside the sweep engine's HOST_TRANSFER_COUNT budget)
     acc = jax.device_get(go(state).acc)
     return _finalize({k: np.asarray(v, np.float64) for k, v in acc.items()},
                      batch.sites[0], n_ticks, batch.gating[0],

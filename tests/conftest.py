@@ -28,3 +28,18 @@ from hypothesis import settings  # noqa: E402
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def sweep_sanitizer():
+    """Arm the runtime contract sanitizers around a sweep test:
+    jax.transfer_guard_device_to_host("disallow") + the jax.log_compiles
+    recompile watcher + the TRACE_HOOK per-bucket trace ledger. Yields a
+    repro.analysis.sanitizer.SanitizerSession; see tests/test_sanitizer.py
+    for the pipeline one-trace-per-bucket assertion it enables."""
+    from repro.analysis import sanitizer
+
+    with sanitizer.sweep_sanitizer() as session:
+        yield session

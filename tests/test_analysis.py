@@ -1,0 +1,451 @@
+"""The contract linter's own test corpus (tier 1, no jax needed).
+
+One known-bad fixture per rule pinning the exact rule ID **and line**,
+a suppressed case, a registry-drift case, the suppression baseline, and
+a self-run asserting the shipped tree is clean. Fixtures build a mini
+repo under tmp_path with their own registry so they cannot interfere
+with the real compile_sites.toml.
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import toml_lite
+from repro.analysis.engine import run_lint
+from repro.analysis.findings import RULES, scan_suppressions
+from repro.analysis.reachability import dead_code_report
+from repro.analysis.registry import Config, load_config
+
+REPO = Path(__file__).resolve().parents[1]
+
+MINI_CFG = """
+[analysis]
+lint_scope = ["src/demo"]
+max_suppressions = {max_sup}
+hot_modules = ["src/demo/hot.py"]
+bitexact_modules = ["src/demo/exact.py"]
+require_scenario_contract = false
+{extra}
+"""
+
+
+def mini(tmp_path, files, *, max_sup=0, extra=""):
+    """Build a throwaway lint root: files maps relpath -> source."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    cfg = Config(raw=toml_lite.loads(
+        MINI_CFG.format(max_sup=max_sup, extra=textwrap.dedent(extra))),
+        root=tmp_path)
+    return run_lint(tmp_path, cfg)
+
+
+def hits(rep, rule, suppressed=False):
+    return [(f.path, f.line) for f in rep.findings
+            if f.rule == rule and f.suppressed == suppressed]
+
+
+# ---- RL001 traced-control-flow -----------------------------------------
+
+def test_rl001_if_on_traced_value(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """})
+    assert hits(rep, "RL001") == [("src/demo/mod.py", 5)]
+
+
+def test_rl001_interprocedural_and_statics(tmp_path):
+    """Taint flows through a project call; static_argnames params and
+    is-None / .ndim checks stay untainted."""
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+
+        def helper(v, mode):
+            if mode == "fast":          # untainted: mode is static
+                v = v * 2
+            assert v.ndim == 2          # untainted: shape metadata
+            return float(v)             # line 7: RL001 coercion
+
+        def g(x, y=None, mode="slow"):
+            if y is None:               # untainted: is-None is static
+                y = x
+            return helper(x + y, mode)
+
+        run = jax.jit(g, static_argnames=("mode",))
+        """})
+    assert hits(rep, "RL001") == [("src/demo/mod.py", 7)]
+
+
+def test_rl001_factory_closure_is_rooted(tmp_path):
+    """A step built by a closure factory and handed to scan via a local
+    alias is still traced-reachable (the simulator's own shape)."""
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+
+        def make_step(n):
+            def step(carry, x):
+                assert n > 0            # untainted closure const
+                while x > 1:            # line 6: RL001
+                    x = x - 1
+                return carry + x, None
+            return step
+
+        def drive(xs):
+            step = make_step(4)
+            out, _ = jax.lax.scan(step, 0.0, xs)
+            return out
+        """})
+    assert hits(rep, "RL001") == [("src/demo/mod.py", 6)]
+
+
+# ---- RL002 compile-site registry ---------------------------------------
+
+def test_rl002_unregistered_site_and_drift(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+
+        def f(x):
+            return jax.jit(lambda v: v + 1)(x)
+        """}, extra="""
+        [[compile_site]]
+        file = "src/demo/mod.py"
+        qualname = "gone_function"
+        kind = "scan"
+        multiplicity = "one"
+        """)
+    got = hits(rep, "RL002")
+    assert ("src/demo/mod.py", 4) in got          # unregistered jit
+    assert any("registry drift" in f.message for f in rep.findings
+               if f.rule == "RL002")              # declared-but-gone
+
+
+def test_rl002_registered_site_is_clean(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x + 1
+        """}, extra="""
+        [[compile_site]]
+        file = "src/demo/mod.py"
+        qualname = "f"
+        kind = "jit"
+        multiplicity = "one per input shape"
+        """)
+    assert hits(rep, "RL002") == []
+
+
+def test_rl002_trace_count_pin_drift(tmp_path):
+    """A TRACE_COUNT probe outside [trace_count].counted_fns is drift."""
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        TRACE_COUNT = 0
+
+        def rogue(x):
+            global TRACE_COUNT
+            TRACE_COUNT += 1
+            return x
+        """}, extra="""
+        [trace_count]
+        file = "src/demo/mod.py"
+        counted_fns = ["blessed_fn"]
+        """)
+    msgs = [f.message for f in rep.findings if f.rule == "RL002"]
+    assert any("rogue" in m for m in msgs)
+    assert any("blessed_fn" in m for m in msgs)
+
+
+# ---- RL003 host-transfer smell -----------------------------------------
+
+def test_rl003_device_get_outside_blessed(tmp_path):
+    rep = mini(tmp_path, {"src/demo/hot.py": """\
+        import jax
+
+        def blessed_fetch(x):
+            return jax.device_get(x)
+
+        def leaky(x):
+            y = jax.device_get(x)
+            x.block_until_ready()
+            return y
+        """}, extra="""
+        [[blessed_transfer]]
+        file = "src/demo/hot.py"
+        qualname = "blessed_fetch"
+        reason = "the one declared fetch"
+        """)
+    assert hits(rep, "RL003") == [("src/demo/hot.py", 7),
+                                  ("src/demo/hot.py", 8)]
+
+
+def test_rl003_np_asarray_on_traced_value(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x).sum()
+        """})
+    assert hits(rep, "RL003") == [("src/demo/mod.py", 6)]
+
+
+# ---- RL004 scenario-leaf sync ------------------------------------------
+
+RL004_CODE = """\
+    SIM_SCHEMA_VERSION = 3
+    FAULT_KNOBS = ("mtbf",)
+
+    class Scenario:
+        rate: object
+        mtbf: object
+
+    class Params:
+        rate: float = 1.0
+        mtbf: float = 0.0
+
+        def __post_init__(self):
+            assert self.rate >= 0
+
+    def use(s):
+        return s.rate + s.mtbf
+"""
+
+RL004_CONTRACT = """
+    [scenario_contract]
+    file = "src/demo/mod.py"
+    scenario_class = "Scenario"
+    params_class = "Params"
+    schema_version = {ver}
+    scenario_fields = [{fields}]
+    validated_params = ["rate"]
+    fingerprint_params = ["mtbf"]
+
+    [[validation_exempt]]
+    field = "mtbf"
+    reason = "zero disables"
+"""
+
+
+def test_rl004_clean_contract(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": RL004_CODE},
+               extra=RL004_CONTRACT.format(ver=3,
+                                           fields='"rate", "mtbf"'))
+    assert hits(rep, "RL004") == []
+
+
+def test_rl004_unregistered_leaf_and_version_drift(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": RL004_CODE},
+               extra=RL004_CONTRACT.format(ver=4, fields='"rate"'))
+    got = hits(rep, "RL004")
+    assert ("src/demo/mod.py", 6) in got     # mtbf leaf unregistered
+    assert ("src/demo/mod.py", 1) in got     # schema version mismatch
+
+
+def test_rl004_unvalidated_param(tmp_path):
+    code = RL004_CODE.replace('        assert self.rate >= 0\n',
+                              '        pass\n')
+    rep = mini(tmp_path, {"src/demo/mod.py": code},
+               extra=RL004_CONTRACT.format(ver=3,
+                                           fields='"rate", "mtbf"'))
+    assert ("src/demo/mod.py", 9) in hits(rep, "RL004")  # rate unchecked
+
+
+# ---- RL005 PRNG discipline ---------------------------------------------
+
+def test_rl005_key_reuse(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+
+        def sample(key):
+            a = jax.random.uniform(key, (3,))
+            b = jax.random.normal(key, (3,))
+            return a + b
+        """})
+    assert hits(rep, "RL005") == [("src/demo/mod.py", 5)]
+
+
+def test_rl005_fold_in_between_is_clean(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+
+        def sample(key):
+            a = jax.random.uniform(key, (3,))
+            key = jax.random.fold_in(key, 1)
+            b = jax.random.normal(key, (3,))
+            k1, k2 = jax.random.split(key)
+            c = jax.random.uniform(k1) + jax.random.uniform(k2)
+            return a + b + c
+        """})
+    assert hits(rep, "RL005") == []
+
+
+def test_rl005_reuse_across_loop_iterations(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import jax
+
+        def sample(key, n):
+            out = 0.0
+            for i in range(n):
+                out += jax.random.uniform(key)
+            return out
+        """})
+    assert hits(rep, "RL005") == [("src/demo/mod.py", 6)]
+
+
+# ---- RL006 dtype discipline --------------------------------------------
+
+def test_rl006_float64_in_bitexact_module(tmp_path):
+    rep = mini(tmp_path, {"src/demo/exact.py": """\
+        import numpy as np
+        import jax.numpy as jnp
+
+        def f(x):
+            y = jnp.asarray(x, dtype=np.float64)
+            z = x.astype("float64")
+            w = jnp.zeros(3, dtype=float)
+            return y + z + w
+        """})
+    assert hits(rep, "RL006") == [("src/demo/exact.py", 5),
+                                  ("src/demo/exact.py", 6),
+                                  ("src/demo/exact.py", 7)]
+
+
+def test_rl006_not_applied_outside_bitexact(tmp_path):
+    rep = mini(tmp_path, {"src/demo/mod.py": """\
+        import numpy as np
+        ACC = np.zeros(4, dtype=np.float64)
+        """})
+    assert hits(rep, "RL006") == []
+
+
+# ---- suppressions -------------------------------------------------------
+
+def test_suppression_with_reason_suppresses(tmp_path):
+    rep = mini(tmp_path, {"src/demo/exact.py": """\
+        import numpy as np
+
+        def f(x):
+            # repro-lint: disable=RL006(host-side fold wants f64)
+            return np.asarray(x, dtype=np.float64)
+        """}, max_sup=1)
+    assert hits(rep, "RL006") == []
+    assert hits(rep, "RL006", suppressed=True) == \
+        [("src/demo/exact.py", 5)]
+    assert rep.unsuppressed == []
+    assert rep.suppression_count == 1
+
+
+def test_suppression_without_reason_is_rl000(tmp_path):
+    rep = mini(tmp_path, {"src/demo/exact.py": """\
+        import numpy as np
+
+        def f(x):
+            return np.asarray(x, dtype=np.float64)  # repro-lint: disable=RL006
+        """}, max_sup=1)
+    assert hits(rep, "RL000") == [("src/demo/exact.py", 4)]
+    assert hits(rep, "RL006") == [("src/demo/exact.py", 4)]  # NOT hidden
+
+
+def test_suppression_baseline_only_goes_down(tmp_path):
+    rep = mini(tmp_path, {"src/demo/exact.py": """\
+        import numpy as np
+        # repro-lint: disable=RL006(one)
+        A = np.zeros(1, dtype=np.float64)
+        # repro-lint: disable=RL006(two)
+        B = np.zeros(1, dtype=np.float64)
+        """}, max_sup=1)
+    assert any(f.rule == "RL000" and "baseline" in f.message
+               for f in rep.findings)
+
+
+def test_suppression_scanner_own_line_targets_next():
+    sup = scan_suppressions("x.py", "# repro-lint: disable=RL001(why)\n"
+                                    "code_line()\n")
+    assert sup.reason_for("RL001", 2) == "why"
+    assert sup.reason_for("RL001", 1) is None
+    assert sup.count == 1
+
+
+# ---- the shipped tree ---------------------------------------------------
+
+def test_shipped_tree_is_clean():
+    """`python -m repro.analysis --check` contract: zero unsuppressed
+    findings on src/repro/{core,kernels} with the committed registry."""
+    cfg = load_config(REPO)
+    rep = run_lint(REPO, cfg)
+    assert rep.unsuppressed == [], "\n".join(
+        f.format() for f in rep.unsuppressed)
+    assert rep.suppression_count <= cfg.max_suppressions
+
+
+def test_shipped_registry_round_trips():
+    cfg = load_config(REPO)
+    assert cfg.lint_scope == ["src/repro/core", "src/repro/kernels"]
+    assert cfg.max_suppressions >= 0
+    assert {e["kind"] for e in cfg.raw["compile_site"]} == \
+        {"jit", "scan", "pallas_call"}
+    assert cfg.blessed("src/repro/core/simulator.py") == \
+        {"_start_sweep", "_finish_sweep"}
+    sc = cfg.raw["scenario_contract"]
+    assert sc["schema_version"] == 6
+    assert list(sc["fingerprint_params"]) == [
+        "wake_fail_prob", "wake_jitter_frac", "link_mtbf_ticks",
+        "repair_ticks", "fault_fallback"]
+
+
+def test_rules_table_is_complete():
+    assert sorted(RULES) == [f"RL00{i}" for i in range(7)]
+    for rule, (name, invariant) in RULES.items():
+        assert name and invariant, rule
+
+
+def test_dead_code_report_reachability():
+    cfg = load_config(REPO)
+    rep = dead_code_report(REPO, cfg.lint_exempt)
+    reach = set(rep["reachable"])
+    # the engine and its oracles must be reachable from the roots
+    for mod in ("repro.core.simulator", "repro.core.planner",
+                "repro.core.gating", "repro.kernels.ref",
+                "repro.models.attention", "repro.models.rwkv6"):
+        assert mod in reach, mod
+    # everything unreachable is an inventoried exempt seed module
+    for u in rep["unreachable"]:
+        assert u["exempt"], f"non-exempt dead module: {u['module']}"
+
+
+def test_cli_check_and_json(tmp_path):
+    """End-to-end CLI: --check exits 0 on the shipped tree and the
+    --json report is well-formed."""
+    from repro.analysis.cli import main
+    out = tmp_path / "report.json"
+    rc = main(["--check", "--json", str(out), "--root", str(REPO),
+               "-q"])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["n_unsuppressed"] == 0
+    assert rep["suppressions"]["count"] <= \
+        rep["suppressions"]["baseline"]
+    assert set(rep["rules"]) == set(RULES)
+
+
+def test_cli_check_fails_on_bad_tree(tmp_path):
+    from repro.analysis.cli import main
+    (tmp_path / "src/demo").mkdir(parents=True)
+    (tmp_path / "src/repro/analysis").mkdir(parents=True)
+    (tmp_path / "src/demo/mod.py").write_text(
+        "import jax\n\n@jax.jit\ndef f(x):\n    if x > 0:\n"
+        "        return x\n    return -x\n")
+    (tmp_path / "src/repro/analysis/compile_sites.toml").write_text(
+        '[analysis]\nlint_scope = ["src/demo"]\n'
+        "require_scenario_contract = false\n")
+    assert main(["--check", "--root", str(tmp_path), "-q"]) == 1

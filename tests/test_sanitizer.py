@@ -1,0 +1,131 @@
+"""Runtime contract sanitizers (repro.analysis.sanitizer): the
+transfer guard around the blessed fetch points, the log_compiles
+recompile watcher, and the TRACE_HOOK ledger that turns the planner
+pipeline's one-trace-per-bucket contract into a hard assertion naming
+the offending bucket's hull tag."""
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.sanitizer import (CompileWatcher, SanitizerSession,
+                                      TraceLedger)
+from repro.core import simulator as S
+from repro.core.topology import FBSite, full_site_tag
+from repro.core.traffic import TRAFFIC_SPECS
+
+# own (ticks, chunk) shape: other modules pin exact trace counts around
+# their own sweeps, so this module must not pre-warm their caches
+TICKS, CHUNK = 440, 220
+
+SITE_A = FBSite(n_clusters=2, racks_per_cluster=8, servers_per_rack=8,
+                csw_per_cluster=3, n_fc=2, csw_ring_links=4,
+                fc_ring_links=8)
+SITE_B = FBSite(n_clusters=3, racks_per_cluster=4, servers_per_rack=6,
+                csw_per_cluster=2, n_fc=3, csw_ring_links=4,
+                fc_ring_links=8)
+
+
+@pytest.fixture(scope="module")
+def mixed_runs():
+    h, u = TRAFFIC_SPECS["fb_hadoop"], TRAFFIC_SPECS["university"]
+    return [(S.SimParams(spec=h, site=SITE_A), 0),
+            (S.SimParams(spec=u, site=SITE_B, rate_scale=1.5), 1),
+            (S.SimParams(spec=h, site=SITE_A, gating_enabled=False), 2),
+            (S.SimParams(spec=u, site=SITE_B), 3)]
+
+
+# ---- recompile watcher -------------------------------------------------
+
+def test_compile_watcher_counts_retraces():
+    import jax
+
+    def probe(x):
+        return x * 2 + 1
+
+    probe_jit = jax.jit(probe)
+    with CompileWatcher() as cw:
+        probe_jit(jnp.ones(3))
+        probe_jit(jnp.ones(3))            # cache hit: no event
+        probe_jit(jnp.ones(4))            # new shape: retrace
+    assert cw.compiles_of("probe") == 2
+    assert cw.events.count("probe") == 2
+
+
+# ---- transfer guard + ledger around a real sweep -----------------------
+
+def test_sweep_runs_clean_under_sanitizer(sweep_sanitizer, mixed_runs):
+    """The full sweep engine under transfer_guard("disallow"): the
+    blessed explicit device_get fetches stay legal, and the ledger
+    sees exactly the traces the TRACE_COUNT pin counts."""
+    n0 = S.TRACE_COUNT
+    res = S.run_sweep(S.make_multi_site_batch(mixed_runs), TICKS,
+                      chunk_ticks=CHUNK)
+    assert len(res) == len(mixed_runs)
+    assert sweep_sanitizer.traces.new_traces() == S.TRACE_COUNT - n0
+    # every hull the ledger saw is this module's padded hull
+    assert set(sweep_sanitizer.traces.tags) <= \
+        {full_site_tag(S.make_multi_site_batch(mixed_runs).hull)}
+
+
+# ---- one-trace-per-bucket under pipeline=True --------------------------
+
+def test_pipeline_one_trace_per_bucket(sweep_sanitizer, mixed_runs):
+    """Satellite 6: under pipeline=True every plan bucket compiles
+    exactly once, attributed per-hull by the TRACE_HOOK ledger (not
+    just a drifted global total)."""
+    S._sweep_runner.cache_clear()         # force fresh traces in-window
+    res, plan = S.run_sweep_planned(mixed_runs, TICKS,
+                                    chunk_ticks=CHUNK, max_compiles=2,
+                                    pipeline=True, return_plan=True)
+    assert plan["n_buckets"] == 2
+    sweep_sanitizer.assert_one_trace_per_bucket(plan)
+    assert sorted(sweep_sanitizer.traces.tags) == \
+        sorted(b["hull"] for b in plan["buckets"])
+    # the recompile watcher agrees: one XLA compile of the sweep step
+    # per bucket
+    assert sweep_sanitizer.compiles.compiles_of(
+        "_sweep_chunk_impl") == plan["n_buckets"]
+    assert [r["label"] for r in res] == \
+        list(S.make_multi_site_batch(mixed_runs).labels)
+
+
+def _session_with(sites):
+    tl = TraceLedger()
+    tl.sites = list(sites)
+    return SanitizerSession(compiles=CompileWatcher(), traces=tl)
+
+
+def test_retraced_bucket_fails_with_hull_tag():
+    tag_a = full_site_tag(SITE_A)
+    plan = {"buckets": [{"hull": tag_a}]}
+    with pytest.raises(AssertionError, match="traced 2x") as ei:
+        _session_with([SITE_A, SITE_A]).assert_one_trace_per_bucket(
+            plan)
+    assert tag_a in str(ei.value)         # names the guilty bucket
+
+
+def test_untraced_bucket_fails_with_hull_tag():
+    tag_a = full_site_tag(SITE_A)
+    plan = {"buckets": [{"hull": tag_a}]}
+    with pytest.raises(AssertionError, match="never traced") as ei:
+        _session_with([]).assert_one_trace_per_bucket(plan)
+    assert tag_a in str(ei.value)
+
+
+def test_stray_hull_fails_with_hull_tag():
+    plan = {"buckets": [{"hull": full_site_tag(SITE_A)}]}
+    with pytest.raises(AssertionError, match="undeclared") as ei:
+        _session_with([SITE_A, SITE_B]).assert_one_trace_per_bucket(
+            plan)
+    assert full_site_tag(SITE_B) in str(ei.value)
+
+
+def test_ledger_restores_previous_hook():
+    sentinel = object()
+    S.TRACE_HOOK = None
+    with TraceLedger():
+        assert S.TRACE_HOOK is not None
+        with TraceLedger() as inner:
+            S.TRACE_HOOK("fake-site")     # chains to the outer ledger
+            assert inner.sites == ["fake-site"]
+    assert S.TRACE_HOOK is None
+    del sentinel
