@@ -14,12 +14,12 @@ from repro.models import model as M
 
 def main():
     cfg = reduced(get_config("qwen3-8b"))
-    key = jax.random.PRNGKey(0)
-    params = M.init_params(cfg, key)
+    k_params, k_data = jax.random.split(jax.random.PRNGKey(0))
+    params = M.init_params(cfg, k_params)
 
     B, prompt_len, gen_len = 8, 24, 16
     max_len = prompt_len + gen_len
-    prompts = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab)
+    prompts = jax.random.randint(k_data, (B, prompt_len), 0, cfg.vocab)
 
     t0 = time.perf_counter()
     logits, cache = jax.jit(

@@ -29,12 +29,38 @@ analysis time, per file, with named rules (mirrored in ROADMAP.md
 * **RL006 dtype-discipline** — float64 literals/dtypes in bit-exact
   kernel/ref/gating modules.
 
-Workflow: ``python -m repro.analysis --check`` (CI lint-canary);
-``--json``/``--dead-code`` write reports under ``results/``. To bless a
-violation, either register it (compile site, blessed transfer,
-validation exemption — all reviewed registry edits) or annotate the
-line with ``# repro-lint: disable=RULE(reason)``; reasons are
-mandatory and the total suppression count is baselined by
+PR 8 adds the **compiled-artifact layer** (artifact.py): every
+registered compile site is AOT-lowered with representative hull shapes
+and the optimized HLO is checked against the committed contract file
+``artifact_contracts.toml``:
+
+* **RL007 artifact-contract-drift** — fold-buffer dtype under both
+  x64 modes, ``memory_analysis()`` peak vs the per-case byte budget,
+  ``cost_analysis()`` flops/bytes vs the blessed per-mode bands, full
+  registry coverage (every RL002 site audited or skipped with a
+  reason), and the planner-calibration spread (the hand cost model
+  ``core/planner.py::site_cost`` vs measured flops must stay
+  shape-proportional; the same measurements back the opt-in
+  ``plan_sites(cost_model="hlo")``).
+* **RL008 artifact-collective-callback** — collectives outside the
+  per-unit allow-list (on the sharded scenario axis the chunk program
+  must contain none) and any host round-trip in the compiled program:
+  ``infeed``/``outfeed``/``send``/``recv`` or callback custom-calls.
+* **RL009 donation-aliasing-loss** — donated sweep carries must
+  actually be input-output aliased in the compiled artifact (probed
+  with forced donation on CPU, where the runner itself skips
+  ``donate_argnames``).
+
+Workflow: ``python -m repro.analysis --check`` (CI lint-canary; the
+artifact-canary job repeats it under ``JAX_ENABLE_X64`` 0/1 and a
+4-fake-device sharded config); ``--json``/``--dead-code`` write
+reports under ``results/``. The audit runs whenever the contract file
+exists (``--no-artifacts`` skips it; ``--bless-artifacts`` re-measures
+the per-mode bands — budgets and allow-lists stay reviewed edits). To
+bless a lint violation, either register it (compile site, blessed
+transfer, validation exemption — all reviewed registry edits) or
+annotate the line with ``# repro-lint: disable=RULE(reason)``; reasons
+are mandatory and the total suppression count is baselined by
 ``max_suppressions`` (it can only go down silently, never up).
 
 Runtime cross-validation lives in sanitizer.py: a conftest fixture
@@ -43,6 +69,7 @@ arms ``jax.transfer_guard_device_to_host("disallow")`` and a
 asserting the planner pipeline's one-trace-per-bucket contract with
 per-hull attribution (the ``TRACE_HOOK`` seam in simulator.py).
 """
+from .artifact import ARTIFACT_RELPATH, run_audit  # noqa: F401
 from .engine import LintReport, run_lint          # noqa: F401
 from .findings import Finding, RULES              # noqa: F401
 from .registry import load_config                 # noqa: F401

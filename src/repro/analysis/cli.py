@@ -1,9 +1,11 @@
-"""``python -m repro.analysis`` — the contract linter CLI.
+"""``python -m repro.analysis`` — the contract linter + artifact-audit CLI.
 
 Exit status: 0 unless ``--check`` is given and unsuppressed findings
 remain (or the registry itself is unreadable). ``--json``/``--dead-code``
 write machine-readable reports under ``results/`` for the CI artifact
-upload.
+upload; the compiled-artifact audit (RL007-RL009) runs whenever the
+contracts file is present (skip with ``--no-artifacts``; refresh the
+blessed measured bands with ``--bless-artifacts``).
 """
 from __future__ import annotations
 
@@ -12,6 +14,7 @@ import json
 import sys
 from pathlib import Path
 
+from . import artifact
 from .engine import run_lint
 from .findings import RULES
 from .reachability import dead_code_report
@@ -31,9 +34,9 @@ def find_root(start: Path | None = None) -> Path:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="contract-aware static analysis for the sweep "
-                    "engine (rules RL001-RL006; see ROADMAP 'Static "
-                    "contracts')")
+        description="contract-aware static analysis + compiled-artifact "
+                    "audit for the sweep engine (rules RL001-RL009; "
+                    "see ROADMAP 'Static contracts')")
     ap.add_argument("paths", nargs="*",
                     help="files/dirs to lint (default: the registry's "
                          "lint_scope)")
@@ -47,6 +50,20 @@ def main(argv=None) -> int:
                     help="also emit results/dead_code_report.json "
                          "(module reachability from the bench/"
                          "simulator roots)")
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="skip the compiled-artifact audit "
+                         "(RL007-RL009): lint only, no jax import")
+    ap.add_argument("--bless-artifacts", action="store_true",
+                    help="measure the compiled artifacts and rewrite "
+                         "the contract file's per-mode blessed bands "
+                         "(collective/callback/donation violations "
+                         "still fail — they are never blessable)")
+    ap.add_argument("--artifact-contracts", default=None, metavar="PATH",
+                    help="contracts file to audit against (default "
+                         f"{artifact.ARTIFACT_RELPATH})")
+    ap.add_argument("--artifact-units", default=None, metavar="NAMES",
+                    help="comma-separated subset of audit units to run "
+                         "(skips the registry-coverage check)")
     ap.add_argument("--root", default=None,
                     help="repo root (default: auto-detected)")
     ap.add_argument("-q", "--quiet", action="store_true",
@@ -63,6 +80,28 @@ def main(argv=None) -> int:
 
     rep = run_lint(root, cfg, args.paths or None)
 
+    # compiled-artifact audit: on whenever the contracts file exists
+    contracts_path = Path(args.artifact_contracts).resolve() \
+        if args.artifact_contracts else root / artifact.ARTIFACT_RELPATH
+    artifact_payload = None
+    if not args.no_artifacts and contracts_path.is_file():
+        units = [u.strip() for u in args.artifact_units.split(",")
+                 if u.strip()] if args.artifact_units else None
+        try:
+            afindings, artifact_payload = artifact.run_audit(
+                root, cfg, contracts_path,
+                bless=args.bless_artifacts, units=units)
+        except Exception as e:
+            print(f"error: artifact audit failed: {e}", file=sys.stderr)
+            return 2
+        rep.findings = sorted(
+            rep.findings + afindings,
+            key=lambda f: (f.path, f.line, f.rule))
+    elif args.bless_artifacts:
+        print(f"error: no contracts file at {contracts_path}",
+              file=sys.stderr)
+        return 2
+
     if not args.quiet:
         for f in rep.findings:
             print(f.format())
@@ -76,6 +115,18 @@ def main(argv=None) -> int:
           f"{len(rep.unsuppressed)} unsuppressed finding(s) "
           f"({', '.join(parts) if parts else 'clean'}), "
           f"{rep.suppression_count}/{rep.baseline} suppressions used")
+    if artifact_payload is not None:
+        cal = artifact_payload.get("calibration") or {}
+        n_cases = sum(len(u.get("cases", []))
+                      for u in artifact_payload["units"].values())
+        mode = artifact_payload["mode"]
+        print(f"artifact audit: {len(artifact_payload['units'])} "
+              f"unit(s), {n_cases} case(s) "
+              f"[x64={int(mode['x64'])}, {mode['devices']} device(s)], "
+              f"planner calibration spread "
+              f"{cal.get('ratio_spread', 1.0):.2f}"
+              + (" — contracts re-blessed"
+                 if artifact_payload.get("blessed") else ""))
 
     if args.json:
         out = root / args.json
@@ -83,6 +134,8 @@ def main(argv=None) -> int:
         payload = rep.to_json()
         payload["rules"] = {r: {"name": n, "invariant": i}
                             for r, (n, i) in RULES.items()}
+        if artifact_payload is not None:
+            payload["artifact"] = artifact_payload
         out.write_text(json.dumps(payload, indent=2, sort_keys=True))
         try:
             shown = out.relative_to(root)

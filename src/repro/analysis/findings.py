@@ -50,6 +50,21 @@ RULES = {
     "RL006": ("dtype-discipline",
               "no float64 literals/dtypes in bit-exact kernel/ref/gating"
               " code (results must not depend on the x64 mode)"),
+    "RL007": ("artifact-contract-drift",
+              "every registry compile site is covered by an artifact"
+              " audit unit (or skipped with a reason) and the compiled"
+              " artifact's cost/memory/fold-dtype stays inside the"
+              " blessed bands of artifact_contracts.toml (re-bless via"
+              " --bless-artifacts)"),
+    "RL008": ("artifact-collective-callback",
+              "the compiled chunk program carries no collectives on the"
+              " scenario batch axis beyond the contract's allow-list"
+              " and no host callbacks/infeed/outfeed/send/recv"),
+    "RL009": ("donation-aliasing-loss",
+              "buffers declared donated are actually input-output"
+              " aliased in the compiled artifact off-CPU, and the carry"
+              " structure stays fully aliasable (donation-probe) on"
+              " CPU"),
 }
 
 _SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=(.*)$")

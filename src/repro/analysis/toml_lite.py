@@ -1,12 +1,16 @@
 """Minimal TOML-subset reader for the analysis contract files.
 
 The container pins Python 3.10 (no stdlib ``tomllib``) and the repo
-must not grow third-party deps, so the checked-in contract registry
-(``compile_sites.toml``) is restricted to the subset this ~100-line
-reader supports:
+must not grow third-party deps, so the checked-in contract files
+(``compile_sites.toml``, ``artifact_contracts.toml``) are restricted to
+the subset this reader supports:
 
-* ``[table]`` and ``[[array-of-tables]]`` headers (one level of
-  nesting via dotted headers is NOT needed and not supported);
+* ``[table]`` and ``[[array-of-tables]]`` headers, including dotted
+  paths (``[a.b.c]``, ``[[a.b]]``) with standard TOML relative-path
+  semantics: an intermediate segment that names an array of tables
+  resolves to its LAST element, so ``[[artifact.unit]]`` followed by
+  ``[artifact.unit.measured]`` nests the sub-table under the unit just
+  declared;
 * ``key = value`` pairs with string (basic, double-quoted), integer,
   float, boolean and flat-array values;
 * full-line and trailing ``#`` comments.
@@ -76,6 +80,30 @@ def _strip_comment(line: str) -> str:
     return "".join(out).strip()
 
 
+def _descend(root: dict, parts: list, where: str) -> dict:
+    """Walk a dotted header path, creating intermediate tables. A
+    segment that resolves to an array of tables continues into its
+    last element (standard TOML array-of-tables nesting)."""
+    cur = root
+    for p in parts:
+        nxt = cur.setdefault(p, {})
+        if isinstance(nxt, list):
+            if not nxt:
+                raise TomlError(f"{where}: {p} is an empty table array")
+            nxt = nxt[-1]
+        if not isinstance(nxt, dict):
+            raise TomlError(f"{where}: {p} is not a table")
+        cur = nxt
+    return cur
+
+
+def _split_path(name: str, where: str) -> list:
+    parts = [p.strip() for p in name.split(".")]
+    if not all(parts):
+        raise TomlError(f"{where}: bad dotted header {name!r}")
+    return parts
+
+
 def loads(text: str) -> dict:
     """Parse the supported TOML subset into nested dicts/lists."""
     root: dict = {}
@@ -98,20 +126,24 @@ def loads(text: str) -> dict:
         if line.startswith("[["):
             if not line.endswith("]]"):
                 raise TomlError(f"{where}: bad table-array header")
-            name = line[2:-2].strip()
-            root.setdefault(name, [])
-            if not isinstance(root[name], list):
-                raise TomlError(f"{where}: {name} is not a table array")
+            parts = _split_path(line[2:-2].strip(), where)
+            parent = _descend(root, parts[:-1], where)
+            arr = parent.setdefault(parts[-1], [])
+            if not isinstance(arr, list):
+                raise TomlError(
+                    f"{where}: {parts[-1]} is not a table array")
             table = {}
-            root[name].append(table)
+            arr.append(table)
             continue
         if line.startswith("["):
             if not line.endswith("]"):
                 raise TomlError(f"{where}: bad table header")
-            name = line[1:-1].strip()
-            table = root.setdefault(name, {})
+            parts = _split_path(line[1:-1].strip(), where)
+            parent = _descend(root, parts[:-1], where)
+            table = parent.setdefault(parts[-1], {})
             if not isinstance(table, dict):
-                raise TomlError(f"{where}: {name} redefined as table")
+                raise TomlError(
+                    f"{where}: {parts[-1]} redefined as table")
             continue
         if "=" not in line:
             raise TomlError(f"{where}: expected key = value, got {line!r}")

@@ -124,35 +124,17 @@ def scheduled_policy(ph: StepPhases, *, idle_frac: float = 0.0) -> dict:
     }
 
 
-def reactive_policy(ph: StepPhases, *, idle_frac: float = 0.0,
-                    max_ticks: int = 4096) -> dict:
-    """The paper's watermark controller on a synthetic timeline of
-    outstanding collective bytes per link (reuses core/gating.gate_step,
-    jitted as one lax.scan). The tick size adapts so one step is at most
-    `max_ticks` ticks; sub-tick laser delays round up to one tick
-    (conservative for the reactive policy)."""
+def _reactive_program(links: int, bw_link_tick: float, tick_us: float,
+                      cap_q: float, up_delay: int):
+    """Build the jitted watermark-controller timeline program
+    ``reactive_policy`` executes.
+
+    A module-level lowering seam: the artifact auditor
+    (repro.analysis.artifact) AOT-lowers exactly this program, so the
+    audited HLO is the HLO the ICI analysis path runs."""
     import jax
     import jax.numpy as jnp
     from repro.core import gating
-
-    links = C.TPU_ICI_LINKS_PER_CHIP
-    step_us = ph.step_us / max(1e-9, 1.0 - idle_frac)
-    tick_us = max(1.0, step_us / max_ticks)
-    n_ticks = max(int(step_us / tick_us), 1)
-    t_layer = ph.t_compute_us + ph.t_collective_us
-    demand = np.zeros(n_ticks)
-    bw_link_tick = C.TPU_ICI_LINK_BW * 1e-6 * tick_us
-    coll_bytes_layer = ph.t_collective_us * C.TPU_ICI_LINK_BW * 1e-6 * links
-    for i in range(ph.n_layers):
-        t0 = min(int((i * t_layer + ph.t_compute_us) / tick_us), n_ticks - 1)
-        demand[t0] += coll_bytes_layer
-    if ph.coll_tail_us > 0:
-        t0 = min(int((ph.n_layers * t_layer + ph.t_tail_us) / tick_us),
-                 n_ticks - 1)
-        demand[t0] += ph.coll_tail_us * C.TPU_ICI_LINK_BW * 1e-6 * links
-
-    cap_q = 8 * bw_link_tick
-    up_delay = max(int(np.ceil(C.LASER_ON_US / tick_us)), 1)
 
     @jax.jit
     def run(demand):
@@ -175,6 +157,37 @@ def reactive_policy(ph: StepPhases, *, idle_frac: float = 0.0,
             jnp.asarray(demand))
         return jnp.sum(powered), stall
 
+    return run
+
+
+def reactive_policy(ph: StepPhases, *, idle_frac: float = 0.0,
+                    max_ticks: int = 4096) -> dict:
+    """The paper's watermark controller on a synthetic timeline of
+    outstanding collective bytes per link (reuses core/gating.gate_step,
+    jitted as one lax.scan). The tick size adapts so one step is at most
+    `max_ticks` ticks; sub-tick laser delays round up to one tick
+    (conservative for the reactive policy)."""
+    links = C.TPU_ICI_LINKS_PER_CHIP
+    step_us = ph.step_us / max(1e-9, 1.0 - idle_frac)
+    tick_us = max(1.0, step_us / max_ticks)
+    n_ticks = max(int(step_us / tick_us), 1)
+    t_layer = ph.t_compute_us + ph.t_collective_us
+    demand = np.zeros(n_ticks)
+    bw_link_tick = C.TPU_ICI_LINK_BW * 1e-6 * tick_us
+    coll_bytes_layer = ph.t_collective_us * C.TPU_ICI_LINK_BW * 1e-6 * links
+    for i in range(ph.n_layers):
+        t0 = min(int((i * t_layer + ph.t_compute_us) / tick_us), n_ticks - 1)
+        demand[t0] += coll_bytes_layer
+    if ph.coll_tail_us > 0:
+        t0 = min(int((ph.n_layers * t_layer + ph.t_tail_us) / tick_us),
+                 n_ticks - 1)
+        demand[t0] += ph.coll_tail_us * C.TPU_ICI_LINK_BW * 1e-6 * links
+
+    cap_q = 8 * bw_link_tick
+    up_delay = max(int(np.ceil(C.LASER_ON_US / tick_us)), 1)
+
+    run = _reactive_program(links, bw_link_tick, tick_us, cap_q,
+                            up_delay)
     powered_sum, stall_us = run(demand)
     on_frac = float(powered_sum) / (n_ticks * links)
     return {

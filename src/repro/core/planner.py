@@ -43,6 +43,18 @@ waste is ``1 - ideal/padded`` where ideal charges each scenario its own
 site's cost. These are the padding-waste stats surfaced per bucket in
 the plan report (and uploaded as a CI artifact by the canaries job).
 
+``plan_sites(..., cost_model="hlo")`` swaps the hand model for the
+blessed XLA ``cost_analysis()`` measurements in the artifact-contract
+file (``repro.analysis.artifact.hlo_cost_table`` — a committed-file
+read, no jax import): exact hull hits use measured flops/tick/scenario,
+unmeasured hulls fall back to ``site_cost`` rescaled by the table's
+geometric-mean measured/model ratio so mixed exact/fallback buckets
+stay comparable. The default (``cost_model="model"``) path is
+untouched — same function object, bit-identical bucketing — and the
+artifact audit's calibration check (RL007) pins the hand model's
+ratio spread against the same measurements, so drift between the two
+models is caught in CI rather than silently skewing plans.
+
 Algorithm
 ---------
 Scenarios with identical FBSites are grouped first (they pad to nothing
@@ -69,6 +81,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -191,13 +204,60 @@ class SweepPlan:
         }
 
 
-def plan_sites(sites: Sequence[FBSite], max_compiles: int = 4) -> SweepPlan:
+def hlo_cost_fn(cost_table: dict | None = None):
+    """Cost function backed by the blessed HLO measurements.
+
+    ``cost_table`` is ``repro.analysis.artifact.hlo_cost_table()``
+    output (loaded from the committed contract file when omitted):
+    ``full_site_tag -> {"flops_per_tick_scen", "site"}``. Exact hull
+    hits return the measured flops; anything unmeasured falls back to
+    ``site_cost`` scaled by the table's geometric-mean measured/model
+    ratio, so exact and fallback costs share one unit system. An empty
+    table degenerates to plain ``site_cost`` (ratio 1).
+    """
+    if cost_table is None:
+        from repro.analysis.artifact import hlo_cost_table
+        cost_table = hlo_cost_table()
+    log_sum, n = 0.0, 0
+    for entry in cost_table.values():
+        model = site_cost(entry["site"])
+        if model > 0.0 and entry["flops_per_tick_scen"] > 0.0:
+            log_sum += math.log(entry["flops_per_tick_scen"] / model)
+            n += 1
+    ratio = math.exp(log_sum / n) if n else 1.0
+
+    def cost(site: FBSite) -> float:
+        entry = cost_table.get(full_site_tag(site))
+        if entry is not None:
+            return float(entry["flops_per_tick_scen"])
+        return ratio * site_cost(site)
+
+    return cost
+
+
+def plan_sites(sites: Sequence[FBSite], max_compiles: int = 4, *,
+               cost_model: str = "model",
+               cost_table: dict | None = None) -> SweepPlan:
     """Partition scenario sites into <= ``max_compiles`` hull buckets.
 
     ``sites[i]`` is scenario i's FBSite (caller order). Every index
     lands in exactly one bucket (tests/test_planner.py holds a
     hypothesis property to that effect).
+
+    ``cost_model`` selects the bucketing cost function: ``"model"``
+    (default) is the hand model ``site_cost`` — bit-identical to the
+    pre-``cost_model`` planner — and ``"hlo"`` uses the blessed
+    ``cost_analysis()`` measurements via ``hlo_cost_fn(cost_table)``
+    (``cost_table`` defaults to the committed contract file; pass one
+    explicitly to avoid the file read or to test synthetic tables).
     """
+    if cost_model == "model":
+        cost = site_cost
+    elif cost_model == "hlo":
+        cost = hlo_cost_fn(cost_table)
+    else:
+        raise ValueError(
+            f"cost_model must be 'model' or 'hlo', got {cost_model!r}")
     sites = list(sites)
     if not sites:
         raise ValueError("plan_sites: empty site list")
@@ -212,7 +272,7 @@ def plan_sites(sites: Sequence[FBSite], max_compiles: int = 4) -> SweepPlan:
     work = [([s], idx) for s, idx in groups.items()]
 
     def padded(members, idx):
-        return site_cost(pad_hull(members)) * len(idx)
+        return cost(pad_hull(members)) * len(idx)
 
     # agglomerative merge until the compile budget is met: each round
     # fuse the pair whose merged hull costs the least extra
@@ -238,9 +298,9 @@ def plan_sites(sites: Sequence[FBSite], max_compiles: int = 4) -> SweepPlan:
         idx = tuple(sorted(idx))
         buckets.append(PlanBucket(
             indices=idx, hull=hull,
-            padded_cost=site_cost(hull) * len(idx),
-            ideal_cost=sum(site_cost(sites[i]) for i in idx)))
+            padded_cost=cost(hull) * len(idx),
+            ideal_cost=sum(cost(sites[i]) for i in idx)))
     buckets.sort(key=lambda b: b.indices[0])
     return SweepPlan(
         buckets=tuple(buckets), max_compiles=max_compiles,
-        single_hull_cost=site_cost(pad_hull(sites)) * len(sites))
+        single_hull_cost=cost(pad_hull(sites)) * len(sites))

@@ -1291,23 +1291,22 @@ class _PendingSweep:
     guard: object = None     # (B,) int32 first-bad-chunk (validate=True)
 
 
-def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
-                 chunk_ticks: int = CHUNK_TICKS, fold: str = "device",
-                 shard: bool | None = None, validate: bool = False,
-                 validate_tol: float | None = None) -> _PendingSweep:
-    """Dispatch a sweep's chunk programs without fetching results.
+def _prepare_sweep_args(batch: ScenarioBatch, *, fold: str = "device",
+                        shard: bool | None = None, validate: bool = False,
+                        validate_tol: float | None = None):
+    """Build the chunk-program operands for a batch: hull-shaped
+    per-scenario state, the device (sum, comp) Kahan fold buffer and
+    the optional validate guard — padded to a devices multiple and
+    placed on the scenario-axis sharding when the sharded path is
+    eligible.
 
-    With ``fold="device"`` (default) this returns as soon as the last
-    chunk is ENQUEUED — jax dispatch is asynchronous, so the caller can
-    trace/compile the next bucket while this one executes. The legacy
-    ``fold="host"`` path synchronizes at every chunk boundary (the
-    pre-PR-5 behaviour, kept for parity pinning).
+    Shared seam: ``_start_sweep`` dispatches exactly these operands
+    through ``_sweep_runner()``, and the artifact auditor
+    (repro.analysis.artifact) AOT-lowers the runner on exactly these
+    operands — so the audited HLO is the HLO the sweep engine runs, not
+    a re-derived lookalike. Returns ``(scen, state, dev_fold, guard,
+    tol)``.
     """
-    global HOST_TRANSFER_COUNT
-    if fold not in ("device", "host"):
-        raise ValueError(f"fold must be 'device' or 'host', got {fold!r}")
-    if n_ticks < 1:
-        raise ValueError(f"n_ticks must be >= 1, got {n_ticks}")
     hull = batch.hull
     n_real = len(batch)
     scen = batch.scen
@@ -1358,6 +1357,31 @@ def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
             dev_fold = jax.device_put(dev_fold, sharding)
         if guard is not None:
             guard = jax.device_put(guard, sharding)
+    return scen, state, dev_fold, guard, tol
+
+
+def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
+                 chunk_ticks: int = CHUNK_TICKS, fold: str = "device",
+                 shard: bool | None = None, validate: bool = False,
+                 validate_tol: float | None = None) -> _PendingSweep:
+    """Dispatch a sweep's chunk programs without fetching results.
+
+    With ``fold="device"`` (default) this returns as soon as the last
+    chunk is ENQUEUED — jax dispatch is asynchronous, so the caller can
+    trace/compile the next bucket while this one executes. The legacy
+    ``fold="host"`` path synchronizes at every chunk boundary (the
+    pre-PR-5 behaviour, kept for parity pinning).
+    """
+    global HOST_TRANSFER_COUNT
+    if fold not in ("device", "host"):
+        raise ValueError(f"fold must be 'device' or 'host', got {fold!r}")
+    if n_ticks < 1:
+        raise ValueError(f"n_ticks must be >= 1, got {n_ticks}")
+    hull = batch.hull
+    n_real = len(batch)
+    scen, state, dev_fold, guard, tol = _prepare_sweep_args(
+        batch, fold=fold, shard=shard, validate=validate,
+        validate_tol=validate_tol)
 
     runner = _sweep_runner()
     acc64 = None
@@ -1747,6 +1771,26 @@ def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
     }
 
 
+def _sim_program(hull: FBSite, scen: Scenario, n_ticks: int):
+    """Build the single-scenario jitted program ``run_sim`` executes.
+
+    A module-level lowering seam: the artifact auditor
+    (repro.analysis.artifact) AOT-lowers exactly this program — not a
+    re-derived lookalike — so the audited HLO is the HLO run_sim runs.
+    ``scen`` leaves are concrete 0-d arrays that close over the step as
+    per-scenario constants (the pre-sweep specialization behaviour).
+    """
+    step = make_sim_step(hull)
+
+    @jax.jit
+    def go(state):
+        out, _ = jax.lax.scan(lambda st, _: (step(scen, st), None),
+                              state, None, length=n_ticks)
+        return out
+
+    return go
+
+
 def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
     """Run ONE scenario for n_ticks us; returns aggregate metrics.
 
@@ -1760,16 +1804,9 @@ def run_sim(params: SimParams, n_ticks: int, seed: int = 0) -> dict:
     """
     batch = make_batch([(params, seed)])
     hull = batch.hull          # == the site's own exact dims
-    # concrete 0-d leaves close over the step -> per-scenario constants
     scen = jax.tree.map(lambda x: x[0], batch.scen)
     state = _init_state(hull, scen, jax.random.PRNGKey(seed))
-    step = make_sim_step(hull)
-
-    @jax.jit
-    def go(state):
-        out, _ = jax.lax.scan(lambda st, _: (step(scen, st), None),
-                              state, None, length=n_ticks)
-        return out
+    go = _sim_program(hull, scen, n_ticks)
 
     # repro-lint: disable=RL003(single-scenario debug path: one fetch per run_sim call, outside the sweep engine's HOST_TRANSFER_COUNT budget)
     acc = jax.device_get(go(state).acc)

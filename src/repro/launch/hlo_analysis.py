@@ -1,109 +1,11 @@
-"""Parse compiled HLO text for collective traffic + roofline terms.
-
-collective_bytes is NOT in compiled.cost_analysis(); we parse the
-post-SPMD HLO and sum per-op result sizes, converting to per-device
-link-bytes with ring-algorithm factors:
-
-    all-gather          R * (g-1)/g          (R = result bytes, g = group)
-    all-reduce          2 * R * (g-1)/g
-    reduce-scatter      R * (g-1)             (operand = R*g)
-    all-to-all          R * (g-1)/g
-    collective-permute  R
-"""
+"""Compatibility shim: the HLO parsers moved to ``repro.analysis.hlo``
+so the compiled-artifact auditor and the launch dry-run accounting
+share one vocabulary. Import from there in new code."""
 from __future__ import annotations
 
-import re
-from dataclasses import dataclass, field
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
-}
-
-_COLL_RE = re.compile(
-    r"=\s+(?:\([^)]*\)|(?P<dtype>\w+)\[(?P<shape>[\d,]*)\][^ ]*)\s+"
-    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
-    r"collective-permute)(?:-start)?\(")
-_TUPLE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _nbytes(dtype: str, shape: str) -> int:
-    n = 1
-    for s in shape.split(","):
-        if s:
-            n *= int(s)
-    return n * _DTYPE_BYTES.get(dtype, 4)
-
-
-@dataclass
-class CollectiveStats:
-    ops: list = field(default_factory=list)   # (op, result_bytes, group, link_bytes)
-
-    @property
-    def total_result_bytes(self) -> float:
-        return sum(o[1] for o in self.ops)
-
-    @property
-    def total_link_bytes(self) -> float:
-        return sum(o[3] for o in self.ops)
-
-    def by_op(self) -> dict:
-        out: dict[str, dict] = {}
-        for op, rb, g, lb in self.ops:
-            d = out.setdefault(op, {"count": 0, "result_bytes": 0.0,
-                                    "link_bytes": 0.0})
-            d["count"] += 1
-            d["result_bytes"] += rb
-            d["link_bytes"] += lb
-        return out
-
-
-def _link_bytes(op: str, result_bytes: float, g: int) -> float:
-    if g <= 1:
-        return 0.0
-    if op == "all-reduce":
-        return 2.0 * result_bytes * (g - 1) / g
-    if op == "all-gather":
-        return result_bytes * (g - 1) / g
-    if op == "reduce-scatter":
-        return result_bytes * (g - 1)
-    if op == "all-to-all":
-        return result_bytes * (g - 1) / g
-    return float(result_bytes)            # collective-permute
-
-
-def parse_collectives(hlo_text: str) -> CollectiveStats:
-    stats = CollectiveStats()
-    for line in hlo_text.splitlines():
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        op = m.group("op")
-        if "-done(" in line:
-            continue                       # avoid double-count of async pairs
-        if m.group("dtype"):
-            rb = _nbytes(m.group("dtype"), m.group("shape"))
-        else:
-            # tuple result: sum the element sizes inside (...)
-            head = line.split("=", 1)[1].split(op)[0]
-            rb = sum(_nbytes(d, s) for d, s in _TUPLE_RE.findall(head))
-        gm = _GROUPS_RE.search(line)
-        g = int(gm.group(2)) if gm else 1
-        stats.ops.append((op, float(rb), g, _link_bytes(op, float(rb), g)))
-    return stats
-
-
-def memory_stats(compiled) -> dict:
-    ma = compiled.memory_analysis()
-    keys = ["generated_code_size_in_bytes", "argument_size_in_bytes",
-            "output_size_in_bytes", "alias_size_in_bytes",
-            "temp_size_in_bytes"]
-    return {k: int(getattr(ma, k, 0) or 0) for k in keys}
-
-
-def cost_stats(compiled) -> dict:
-    ca = compiled.cost_analysis() or {}
-    return {"flops": float(ca.get("flops", 0.0)),
-            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+from repro.analysis.hlo import (          # noqa: F401
+    CollectiveStats,
+    cost_stats,
+    memory_stats,
+    parse_collectives,
+)

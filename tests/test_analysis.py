@@ -390,7 +390,8 @@ def test_shipped_tree_is_clean():
 
 def test_shipped_registry_round_trips():
     cfg = load_config(REPO)
-    assert cfg.lint_scope == ["src/repro/core", "src/repro/kernels"]
+    assert cfg.lint_scope == ["src/repro/core", "src/repro/kernels",
+                              "benchmarks", "examples"]
     assert cfg.max_suppressions >= 0
     assert {e["kind"] for e in cfg.raw["compile_site"]} == \
         {"jit", "scan", "pallas_call"}
@@ -404,7 +405,7 @@ def test_shipped_registry_round_trips():
 
 
 def test_rules_table_is_complete():
-    assert sorted(RULES) == [f"RL00{i}" for i in range(7)]
+    assert sorted(RULES) == [f"RL00{i}" for i in range(10)]
     for rule, (name, invariant) in RULES.items():
         assert name and invariant, rule
 
@@ -425,17 +426,20 @@ def test_dead_code_report_reachability():
 
 def test_cli_check_and_json(tmp_path):
     """End-to-end CLI: --check exits 0 on the shipped tree and the
-    --json report is well-formed."""
+    --json report is well-formed. --no-artifacts keeps this leg
+    jax-free and fast; the artifact audit has its own CLI test in
+    tests/test_artifact.py."""
     from repro.analysis.cli import main
     out = tmp_path / "report.json"
-    rc = main(["--check", "--json", str(out), "--root", str(REPO),
-               "-q"])
+    rc = main(["--check", "--no-artifacts", "--json", str(out),
+               "--root", str(REPO), "-q"])
     assert rc == 0
     rep = json.loads(out.read_text())
     assert rep["n_unsuppressed"] == 0
     assert rep["suppressions"]["count"] <= \
         rep["suppressions"]["baseline"]
     assert set(rep["rules"]) == set(RULES)
+    assert "artifact" not in rep           # audit skipped, not empty
 
 
 def test_cli_check_fails_on_bad_tree(tmp_path):
@@ -449,3 +453,62 @@ def test_cli_check_fails_on_bad_tree(tmp_path):
         '[analysis]\nlint_scope = ["src/demo"]\n'
         "require_scenario_contract = false\n")
     assert main(["--check", "--root", str(tmp_path), "-q"]) == 1
+
+
+# ---- toml_lite nested tables (the artifact-contract file shape) ---------
+
+def test_toml_lite_nested_table_headers():
+    doc = toml_lite.loads(textwrap.dedent("""\
+        [a]
+        x = 1
+        [a.b]
+        y = 2
+        [a.b.c]
+        z = "deep"
+        """))
+    assert doc == {"a": {"x": 1, "b": {"y": 2, "c": {"z": "deep"}}}}
+
+
+def test_toml_lite_arrays_of_tables_nest():
+    doc = toml_lite.loads(textwrap.dedent("""\
+        [[unit]]
+        name = "u1"
+        [[unit.case]]
+        tag = "a"
+        [unit.case.measured.x32]
+        flops = 1.5
+        [[unit.case]]
+        tag = "b"
+        [unit.case.measured.x64]
+        flops = 2.5
+        [[unit]]
+        name = "u2"
+        """))
+    units = doc["unit"]
+    assert [u["name"] for u in units] == ["u1", "u2"]
+    cases = units[0]["case"]
+    assert [c["tag"] for c in cases] == ["a", "b"]
+    # dotted headers attach to the LAST element of each table array
+    assert cases[0]["measured"] == {"x32": {"flops": 1.5}}
+    assert cases[1]["measured"] == {"x64": {"flops": 2.5}}
+    assert "case" not in units[1]
+
+
+def test_toml_lite_dotted_header_through_scalar_is_an_error():
+    with pytest.raises(toml_lite.TomlError, match="not a table"):
+        toml_lite.loads("[a]\nb = 1\n[a.b.c]\nd = 2\n")
+    with pytest.raises(toml_lite.TomlError, match="empty table array"):
+        toml_lite.loads("[a]\nb = []\n[a.b.c]\nd = 2\n")
+
+
+def test_toml_lite_loads_the_committed_artifact_contracts():
+    art = toml_lite.load(
+        REPO / "src/repro/analysis/artifact_contracts.toml")["artifact"]
+    assert art["schema_version"] == 1
+    assert {u["name"] for u in art["unit"]} == \
+        {"sweep_chunk", "run_sim", "ici_reactive"}
+    sweep = next(u for u in art["unit"] if u["name"] == "sweep_chunk")
+    case0 = sweep["case"][0]
+    assert set(case0["measured"]) == {"x32", "x64"}
+    assert case0["measured"]["x32"]["flops_per_scen"] > 0
+    assert all(s["reason"].strip() for s in art["skip"])

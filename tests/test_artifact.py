@@ -1,0 +1,355 @@
+"""Compiled-artifact auditor tests (RL007/RL008/RL009).
+
+Three layers, mirroring the auditor's own split:
+
+* a **fixture corpus of mutated HLO text** drives the pure checkers
+  with injected violations — collective on the batch axis, host
+  callback/infeed, lost donation aliasing, wrong fold dtype, memory
+  over budget, cost drift — pinning the EXACT rule ID each one raises
+  (no jax import);
+* **contract-level audits** of the real engine: the shipped tree +
+  committed contracts must audit clean (in-process x32, subprocess
+  x64 and 4-fake-device sharded legs via tests/_subproc.py), and a
+  mutated contracts file must raise RL007 and flip the CLI ``--check``
+  exit code to 1;
+* the **planner calibration** surface: every audited hull reports a
+  model-vs-measured ratio and the spread stays within the contract.
+"""
+import textwrap
+import types
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import artifact as A
+from repro.analysis import hlo
+
+from tests._subproc import run_with_devices
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---- fixture corpus: mutated HLO text -> exact rule IDs -----------------
+
+CLEAN_HLO = """\
+HloModule jit__sweep_chunk_impl, entry_computation_layout={(f32[4,64]{1,0})->f32[4,64]{1,0}}
+
+ENTRY %main.5 (p0.1: f32[4,64]) -> f32[4,64] {
+  %p0.1 = f32[4,64]{1,0} parameter(0)
+  %add.2 = f32[4,64]{1,0} add(f32[4,64]{1,0} %p0.1, f32[4,64]{1,0} %p0.1)
+  ROOT %multiply.3 = f32[4,64]{1,0} multiply(%add.2, %p0.1)
+}
+"""
+
+ALLREDUCE_HLO = CLEAN_HLO.replace(
+    "ROOT %multiply.3",
+    "%all-reduce.9 = f32[4,64]{1,0} all-reduce(f32[4,64]{1,0} %add.2), "
+    "replica_groups=[1,4], to_apply=%region_0.4\n  ROOT %multiply.3")
+
+CALLBACK_HLO = CLEAN_HLO.replace(
+    "ROOT %multiply.3",
+    '%custom-call.7 = (f32[4,64]{1,0}, s32[]) custom-call(%add.2), '
+    'custom_call_target="xla_python_cpu_callback"\n  ROOT %multiply.3')
+
+INFEED_HLO = CLEAN_HLO.replace(
+    "ROOT %multiply.3",
+    "%infeed.6 = ((f32[4,64]{1,0}), token[]) infeed(token[] %tok.5)\n"
+    "  ROOT %multiply.3")
+
+ALIASED_HLO = CLEAN_HLO.replace(
+    "entry_computation_layout",
+    "input_output_alias={ {0}: (0, {}, may-alias), {1}: (1, {}, "
+    "may-alias) }, entry_computation_layout")
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+def test_fixture_clean_hlo_passes_everything():
+    assert A.check_collectives_text(CLEAN_HLO, [], "p", "w") == []
+    assert A.check_host_ops_text(CLEAN_HLO, "p", "w") == []
+    assert hlo.count_alias_entries(CLEAN_HLO) == 0
+
+
+def test_fixture_injected_allreduce_is_rl008():
+    got = A.check_collectives_text(ALLREDUCE_HLO, [], "p", "w")
+    assert rules(got) == ["RL008"]
+    assert "all-reduce" in got[0].message
+    # ring all-reduce over g=4: 2 * 4*64*4B * 3/4 link-bytes
+    assert "1536 link-bytes" in got[0].message
+    # the allow-list is honored (a reviewed contract edit blesses it)
+    assert A.check_collectives_text(ALLREDUCE_HLO, ["all-reduce"],
+                                    "p", "w") == []
+
+
+def test_fixture_injected_callback_and_infeed_are_rl008():
+    got = A.check_host_ops_text(CALLBACK_HLO, "p", "w")
+    assert rules(got) == ["RL008"]
+    assert "xla_python_cpu_callback" in got[0].message
+    got = A.check_host_ops_text(INFEED_HLO, "p", "w")
+    assert rules(got) == ["RL008"]
+    assert "infeed" in got[0].message
+
+
+def test_fixture_alias_header_parses():
+    assert hlo.count_alias_entries(ALIASED_HLO) == 2
+
+
+def test_fixture_donation_loss_is_rl009():
+    ok_mem = {"alias_size_in_bytes": 7568}
+    assert A.check_donation(ok_mem, 139, 7568, 1.0, "p", "w") == []
+    # aliasing silently dropped by XLA -> donation lost
+    got = A.check_donation({"alias_size_in_bytes": 0}, 0, 7568, 1.0,
+                           "p", "w")
+    assert rules(got) == ["RL009"]
+    # partial aliasing below the contract fraction is also a loss
+    got = A.check_donation({"alias_size_in_bytes": 100}, 2, 7568, 1.0,
+                           "p", "w")
+    assert rules(got) == ["RL009"]
+    # nothing donated -> nothing to check
+    assert A.check_donation({"alias_size_in_bytes": 0}, 0, 0, 1.0,
+                            "p", "w") == []
+
+
+def test_fixture_fold_dtype_drift_is_rl007():
+    assert A.check_fold_dtype("float32", "float32", "p", "w") == []
+    got = A.check_fold_dtype("float64", "float32", "p", "w")
+    assert rules(got) == ["RL007"]
+    assert "_fold_dtype" in got[0].message
+
+
+def test_fixture_memory_over_budget_is_rl007():
+    mem = {"temp_size_in_bytes": 90_000, "output_size_in_bytes": 20_000}
+    assert A.check_memory_budget(mem, 120_000, "p", "w") == []
+    got = A.check_memory_budget(mem, 100_000, "p", "w")
+    assert rules(got) == ["RL007"]
+    assert "110000 B" in got[0].message
+    # budget 0 = unset (bless fills it): never fires
+    assert A.check_memory_budget(mem, 0, "p", "w") == []
+
+
+def test_fixture_cost_drift_is_rl007():
+    blessed = {"flops_per_scen": 1000.0, "bytes_per_scen": 2000.0}
+    ok = {"flops_per_scen": 1400.0, "bytes_per_scen": 2100.0}
+    assert A.check_cost_drift(ok, blessed, 0.5, "x32", "p", "w") == []
+    bad = {"flops_per_scen": 1501.0, "bytes_per_scen": 2100.0}
+    got = A.check_cost_drift(bad, blessed, 0.5, "x32", "p", "w")
+    assert rules(got) == ["RL007"]
+    assert "FLOPs" in got[0].message
+    # both axes drifted -> one finding each
+    bad = {"flops_per_scen": 1501.0, "bytes_per_scen": 4000.0}
+    assert rules(A.check_cost_drift(bad, blessed, 0.5, "x32", "p",
+                                    "w")) == ["RL007", "RL007"]
+
+
+def test_fixture_unblessed_mode_is_rl007():
+    got = A.check_cost_drift({"flops_per_scen": 1.0}, None, 0.5, "x64",
+                             "p", "w")
+    assert rules(got) == ["RL007"]
+    assert "--bless-artifacts" in got[0].message
+
+
+def test_fixture_coverage_miss_is_rl007():
+    cfg = types.SimpleNamespace(raw={"compile_site": [
+        {"file": "src/a.py", "qualname": "f"},
+        {"file": "src/b.py", "qualname": "g.inner"},
+        {"file": "src/c.py", "qualname": "h"},
+    ]})
+    art = {"unit": [{"covers": ["src/a.py::f", "src/b.py::g"]}],
+           "skip": [{"file": "src/c.py", "qualname": "h",
+                     "reason": "why not"}]}
+    assert A.check_coverage(cfg, art) == []   # exact, prefix, skip
+    art["skip"] = []
+    got = A.check_coverage(cfg, art)
+    assert rules(got) == ["RL007"]
+    assert "src/c.py::h" in got[0].message
+    # a skip without a reason is itself a finding
+    art["skip"] = [{"file": "src/c.py", "qualname": "h", "reason": " "}]
+    assert rules(A.check_coverage(cfg, art)) == ["RL007"]
+
+
+def test_fixture_calibration_spread_is_rl007():
+    cal = {"ratio_spread": 1.2, "hulls": [{"tag": "a", "ratio": 3.0}]}
+    assert A.check_calibration(cal, 2.0) == []
+    cal = {"ratio_spread": 2.5,
+           "hulls": [{"tag": "2x2c2f2", "ratio": 2.0},
+                     {"tag": "4x8c4f4", "ratio": 5.0}]}
+    got = A.check_calibration(cal, 2.0)
+    assert rules(got) == ["RL007"]
+    assert got[0].path == "src/repro/core/planner.py"
+    assert "cost_model='hlo'" in got[0].message
+
+
+def test_host_op_regex_tuple_and_plain_forms():
+    # real infeed results are tuples; send/recv are plain-typed
+    assert hlo.find_host_ops(
+        "  %s.1 = f32[4]{0} send(%p, %tok), channel_id=1\n") == ["send"]
+    assert hlo.find_host_ops(
+        "  %o.2 = token[] outfeed(%data, %tok)\n") == ["outfeed"]
+    # not fooled by a variable merely named like an op
+    assert hlo.find_host_ops(
+        "  %x = f32[4]{0} add(%send_buf, %p)\n") == []
+
+
+# ---- contract-level: the shipped tree audits clean ----------------------
+
+def load_repo_cfg():
+    from repro.analysis.registry import load_config
+    return load_config(REPO)
+
+
+def test_shipped_tree_audits_clean_x32():
+    """The committed engine + committed contracts: zero findings under
+    the current (x32) mode — the full audit the artifact-canary runs."""
+    findings, payload = A.run_audit(REPO, load_repo_cfg())
+    assert findings == [], "\n".join(f.format() for f in findings)
+    assert set(payload["units"]) == {"sweep_chunk", "run_sim",
+                                     "ici_reactive"}
+    assert payload["mode"]["x64"] is False
+    cal = payload["calibration"]
+    assert cal["hulls"], "calibration must cover the sweep hulls"
+    assert cal["ratio_spread"] <= 2.0
+    # site_cost models the step as bandwidth-bound: every hull's
+    # arithmetic intensity sits far below the TPU ridge point
+    assert all(0 < h["ridge_frac"] < 1 for h in cal["hulls"])
+    # the donation probe must prove full aliasing on CPU
+    probes = [c["alias"] for c in payload["units"]["sweep_chunk"]["cases"]
+              if c["alias"]]
+    assert probes and all(
+        p["alias_size"] >= p["donated_bytes"] and p["entries"] > 0
+        for p in probes)
+    # chunk programs are device-resident and lane-independent
+    for u in payload["units"].values():
+        for c in u["cases"]:
+            assert c["collectives"] == {}
+            assert c["host_ops"] == 0
+
+
+def test_audit_clean_x64_subprocess():
+    """Dual-mode leg: the committed contracts hold under x64 too (fold
+    dtype flips to float64, the x64 measured band applies)."""
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["JAX_ENABLE_X64"] = "1"
+        from pathlib import Path
+        from repro.analysis import artifact
+        from repro.analysis.registry import load_config
+        root = Path({str(REPO)!r})
+        findings, payload = artifact.run_audit(
+            root, load_config(root), units=["run_sim", "ici_reactive"])
+        assert payload["mode"]["x64"] is True
+        assert findings == [], [f.format() for f in findings]
+        print("X64-AUDIT-", "CLEAN", sep="")
+    """)
+    assert "X64-AUDIT-CLEAN" in run_with_devices(code, n_devices=1)
+
+
+def test_audit_sweep_sharded_4dev_subprocess():
+    """Sharded leg: with 4 fake devices the chunk program runs under
+    NamedSharding on the scenario axis — still zero collectives, zero
+    host ops, and the per-scenario-normalized cost stays in the same
+    blessed band (the measurement is leg-invariant)."""
+    code = textwrap.dedent(f"""
+        from pathlib import Path
+        from repro.analysis import artifact
+        from repro.analysis.registry import load_config
+        root = Path({str(REPO)!r})
+        findings, payload = artifact.run_audit(
+            root, load_config(root), units=["sweep_chunk"])
+        assert findings == [], [f.format() for f in findings]
+        cases = payload["units"]["sweep_chunk"]["cases"]
+        assert all(c["shards"] == 4 for c in cases), cases
+        assert all(c["collectives"] == {{}} and c["host_ops"] == 0
+                   for c in cases)
+        print("SHARDED-AUDIT-", "CLEAN", sep="")
+    """)
+    assert "SHARDED-AUDIT-CLEAN" in run_with_devices(code, n_devices=4)
+
+
+# ---- contract-level: injected violations flip the exit code -------------
+
+MUTATED_CONTRACTS = """\
+[artifact]
+schema_version = 1
+cost_rtol = 0.5
+min_alias_frac = 1.0
+max_ratio_spread = 2.0
+
+[[artifact.unit]]
+name = "ici_reactive"
+builder = "ici_reactive"
+file = "src/repro/core/ici_gating.py"
+covers = ["src/repro/core/ici_gating.py::_reactive_program"]
+collectives_allowed = []
+
+[[artifact.unit.case]]
+tag = "t256"
+n_ticks = 256
+tick_us = 1.0
+peak_bytes_budget = 1
+
+[artifact.unit.case.measured.x32]
+flops_per_scen = 511000.0
+bytes_per_scen = 2627.0
+
+[artifact.unit.case.measured.x64]
+flops_per_scen = 520000.0
+bytes_per_scen = 4875.0
+
+[[artifact.unit.case]]
+tag = "t128"
+n_ticks = 128
+tick_us = 1.0
+"""
+
+
+@pytest.fixture(scope="module")
+def mutated_contracts(tmp_path_factory):
+    p = tmp_path_factory.mktemp("contracts") / "mutated.toml"
+    p.write_text(MUTATED_CONTRACTS)
+    return p
+
+
+def test_mutated_contracts_raise_rl007(mutated_contracts):
+    """One audit run, three injected violations: memory budget of 1
+    byte, a 1000x-drifted blessed FLOPs band, and an unblessed case."""
+    findings, _ = A.run_audit(REPO, load_repo_cfg(), mutated_contracts,
+                              units=["ici_reactive"])
+    msgs = [f.message for f in findings]
+    assert rules(findings) == ["RL007"] * 3, msgs
+    assert any("exceeds the contract budget 1 B" in m for m in msgs)
+    assert any("drifted beyond" in m for m in msgs)
+    assert any("--bless-artifacts" in m for m in msgs)
+
+
+def test_cli_check_exits_nonzero_on_artifact_violation(mutated_contracts):
+    from repro.analysis.cli import main
+    rc = main(["--check", "--root", str(REPO),
+               "--artifact-contracts", str(mutated_contracts),
+               "--artifact-units", "ici_reactive", "-q"])
+    assert rc == 1
+
+
+def test_schema_version_mismatch_is_rl007(tmp_path):
+    p = tmp_path / "contracts.toml"
+    p.write_text("[artifact]\nschema_version = 99\n")
+    findings, _ = A.run_audit(REPO, load_repo_cfg(), p, units=[])
+    assert rules(findings) == ["RL007"]
+    assert "schema_version" in findings[0].message
+
+
+# ---- planner calibration surface ----------------------------------------
+
+def test_hlo_cost_table_reads_committed_contracts():
+    table = A.hlo_cost_table(REPO)
+    # the three non-validate sweep hulls, keyed by full site tag
+    assert len(table) == 3
+    for tag, entry in table.items():
+        assert entry["flops_per_tick_scen"] > 0
+        assert "s" in tag and "r" in tag            # full_site_tag form
+    # x64 band is distinct (float64 arithmetic costs more)
+    t64 = A.hlo_cost_table(REPO, mode="x64")
+    assert set(t64) == set(table)
+    assert all(t64[k]["flops_per_tick_scen"]
+               > table[k]["flops_per_tick_scen"] for k in table)

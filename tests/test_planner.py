@@ -216,3 +216,92 @@ def test_pipelined_matches_serial_bucket_execution(mixed_runs):
         assert a["plan_hull"] == b["plan_hull"]
         for k in S.PARITY_KEYS:
             assert a[k] == b[k], (a["label"], k)
+
+
+# ---- cost_model="hlo" (PR 8: blessed-artifact calibration) ---------------
+
+def _mixed_sites():
+    return ([FBSite(2, 2, 4, 2, 2)] * 3 + [FBSite(4, 8, 16, 4, 4)] * 2
+            + [FBSite(2, 4, 8, 2, 2)])
+
+
+def test_cost_model_default_is_bitwise_identical():
+    """plan_sites() and plan_sites(cost_model="model") must agree with
+    the pre-cost_model planner field for field — the default bucketing
+    is pinned bit-wise."""
+    sites = _mixed_sites()
+    for k in (1, 2, 3):
+        a = planner.plan_sites(sites, max_compiles=k)
+        b = planner.plan_sites(sites, max_compiles=k,
+                               cost_model="model")
+        assert a == b
+        assert a.fingerprint == b.fingerprint
+        assert a.report() == b.report()
+
+
+def test_cost_model_rejects_unknown():
+    with pytest.raises(ValueError, match="cost_model"):
+        planner.plan_sites(_mixed_sites(), cost_model="bogus")
+
+
+def test_hlo_cost_fn_exact_hit_and_scaled_fallback():
+    """Synthetic table: measured hulls cost exactly their table entry;
+    unmeasured hulls get site_cost rescaled by the geometric-mean
+    measured/model ratio (2x and 8x -> k = 4)."""
+    from repro.core.topology import full_site_tag
+    small, large = FBSite(2, 2, 4, 2, 2), FBSite(4, 8, 16, 4, 4)
+    table = {
+        full_site_tag(small): {
+            "flops_per_tick_scen": 2.0 * planner.site_cost(small),
+            "site": small},
+        full_site_tag(large): {
+            "flops_per_tick_scen": 8.0 * planner.site_cost(large),
+            "site": large},
+    }
+    cost = planner.hlo_cost_fn(table)
+    assert cost(small) == 2.0 * planner.site_cost(small)
+    assert cost(large) == 8.0 * planner.site_cost(large)
+    other = FBSite(3, 3, 6, 3, 3)
+    assert cost(other) == pytest.approx(4.0 * planner.site_cost(other))
+    # empty table degenerates to the hand model unchanged
+    bare = planner.hlo_cost_fn({})
+    assert bare(other) == planner.site_cost(other)
+
+
+def test_plan_sites_hlo_mode_uses_the_table():
+    """A table that inverts the small/large cost ordering must flip
+    which hull the planner merges toward — proof the cost model is
+    actually consulted, not just loaded."""
+    from repro.core.topology import full_site_tag
+    small, large = FBSite(2, 2, 4, 2, 2), FBSite(4, 8, 16, 4, 4)
+    sites = [small] * 2 + [large] * 2
+    # inverted world: the small hull is 100x the large one
+    table = {
+        full_site_tag(small): {
+            "flops_per_tick_scen": 100.0 * planner.site_cost(large),
+            "site": small},
+        full_site_tag(large): {
+            "flops_per_tick_scen": planner.site_cost(large),
+            "site": large},
+    }
+    plan = planner.plan_sites(sites, max_compiles=2, cost_model="hlo",
+                              cost_table=table)
+    by_first = {b.indices[0]: b for b in plan.buckets}
+    # bucket costs reflect the table, not the hand model
+    assert by_first[0].padded_cost == pytest.approx(
+        2 * 100.0 * planner.site_cost(large))
+    assert by_first[2].padded_cost == pytest.approx(
+        2 * planner.site_cost(large))
+
+
+def test_plan_sites_hlo_mode_loads_committed_contracts():
+    """Without an explicit table the HLO mode reads the committed
+    artifact contracts; bucketing structure matches the hand model on
+    the blessed hulls (the calibration contract keeps the two
+    shape-proportional)."""
+    sites = _mixed_sites()
+    a = planner.plan_sites(sites, max_compiles=2)
+    b = planner.plan_sites(sites, max_compiles=2, cost_model="hlo")
+    assert [x.indices for x in a.buckets] == \
+        [x.indices for x in b.buckets]
+    assert a.fingerprint == b.fingerprint   # fingerprint is cost-free
