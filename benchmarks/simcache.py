@@ -24,7 +24,7 @@ from pathlib import Path
 from repro.core import planner
 from repro.core.simulator import (SIM_SCHEMA_VERSION, SimParams,
                                   execution_mode, fault_fingerprint,
-                                  run_sweep_planned)
+                                  flow_fingerprint, run_sweep_planned)
 from repro.core.topology import FBSite, full_site_tag
 from repro.core.traffic import TRAFFIC_SPECS
 
@@ -40,14 +40,16 @@ def _plan(site: FBSite, max_compiles: int) -> planner.SweepPlan:
 
 
 def _cache_meta(site: FBSite, ticks: int, max_compiles: int) -> dict:
-    # "faults" pins the default (all-zero) fault knobs and "validate"
-    # the guard mode: results cached before the fault model existed, or
-    # under different knob defaults, never serve a fault-aware run
+    # "faults"/"flows" pin the default (all-off) fault and flow knobs
+    # and "validate" the guard mode: results cached before either model
+    # existed, or under different knob defaults, never serve a
+    # fault-aware or flow-aware run
     return {"sim_schema": SIM_SCHEMA_VERSION, "ticks": ticks,
             "site": dataclasses.asdict(site),
             "plan": _plan(site, max_compiles).fingerprint,
             "exec": execution_mode(n_scenarios=_RUNS_PER_TRACE),
-            "faults": fault_fingerprint(), "validate": False}
+            "faults": fault_fingerprint(), "flows": flow_fingerprint(),
+            "validate": False}
 
 
 def _cache_path(site: FBSite, ticks: int) -> Path:

@@ -21,9 +21,11 @@ analysis time, per file, with named rules (mirrored in ROADMAP.md
   fetch points (``[[blessed_transfer]]``), plus ``np.asarray`` /
   array-``__iter__`` over traced values inside traced functions.
 * **RL004 scenario-leaf-sync** — Scenario/SimParams fields must match
-  the registry inventory: fingerprint knobs == ``FAULT_KNOBS``, every
-  param validated in ``__post_init__`` or exempted with a reason, the
-  schema version pinned on both sides, no dead Scenario leaves.
+  the registry inventory: fingerprint knobs == the module literals
+  (``FAULT_KNOBS``, and since PR 9 the flow engine's ``FLOW_KNOBS``
+  via ``flow_fingerprint_params``), every param validated in
+  ``__post_init__`` or exempted with a reason, the schema version
+  pinned on both sides, no dead Scenario leaves.
 * **RL005 prng-discipline** — a key feeding two sampling calls without
   an intervening ``split``/``fold_in`` (checkers.py).
 * **RL006 dtype-discipline** — float64 literals/dtypes in bit-exact

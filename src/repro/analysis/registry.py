@@ -293,22 +293,30 @@ def check_scenario_contract(proj: Project, cfg: Config) -> list:
                 f"contract pins {sc.get('schema_version')} (bump both "
                 "together)"))
 
-    # 3. fingerprint knobs == FAULT_KNOBS literal
-    fk_node = _module_assign(mi, sc.get("fingerprint_name",
-                                        "FAULT_KNOBS"))
-    if fk_node is None:
-        out.append(Finding("RL004", mi.path, 1,
-                           "FAULT_KNOBS assignment not found"))
-    else:
+    # 3. fingerprint knobs == the module's KNOBS literals. The fault
+    # pin is mandatory; further fingerprints (the flow engine's
+    # FLOW_KNOBS) are checked when the contract declares them — same
+    # cache-fingerprint-moves-with-the-registry rule for every family.
+    fp_pins = [(sc.get("fingerprint_name", "FAULT_KNOBS"),
+                "fingerprint_params", True)]
+    if "flow_fingerprint_params" in sc:
+        fp_pins.append((sc.get("flow_fingerprint_name", "FLOW_KNOBS"),
+                        "flow_fingerprint_params", True))
+    for fp_name, fp_key, _required in fp_pins:
+        fk_node = _module_assign(mi, fp_name)
+        if fk_node is None:
+            out.append(Finding("RL004", mi.path, 1,
+                               f"{fp_name} assignment not found"))
+            continue
         lits = [e.value for e in ast.walk(fk_node.value)
                 if isinstance(e, ast.Constant)
                 and isinstance(e.value, str)]
-        if lits != list(sc.get("fingerprint_params", [])):
+        if lits != list(sc.get(fp_key, [])):
             out.append(Finding(
                 "RL004", mi.path, fk_node.lineno,
-                f"FAULT_KNOBS {tuple(lits)} != contract "
-                f"fingerprint_params "
-                f"{tuple(sc.get('fingerprint_params', []))} — the "
+                f"{fp_name} {tuple(lits)} != contract "
+                f"{fp_key} "
+                f"{tuple(sc.get(fp_key, []))} — the "
                 "cache fingerprint and the registry must move "
                 "together"))
 
@@ -354,11 +362,12 @@ def check_scenario_contract(proj: Project, cfg: Config) -> list:
             "RL004", REGISTRY_RELPATH, 1,
             f"contract mentions SimParams field {f!r} that no longer "
             "exists"))
-    # every fingerprint knob must be a real SimParams field
-    for f in sc.get("fingerprint_params", []):
-        if f not in actual_p:
-            out.append(Finding(
-                "RL004", REGISTRY_RELPATH, 1,
-                f"fingerprint_params lists {f!r} which is not a "
-                "SimParams field"))
+    # every fingerprint knob (any family) must be a real SimParams field
+    for fp_key in ("fingerprint_params", "flow_fingerprint_params"):
+        for f in sc.get(fp_key, []):
+            if f not in actual_p:
+                out.append(Finding(
+                    "RL004", REGISTRY_RELPATH, 1,
+                    f"{fp_key} lists {f!r} which is not a "
+                    "SimParams field"))
     return out

@@ -41,6 +41,36 @@ DELAY_HIST_BINS = 48
 DELAY_HIST_MIN_US = 4.0          # just under the 5.75 us stack+wire floor
 DELAY_HIST_BINS_PER_OCTAVE = 6   # ~12% resolution per bin, range ~900 us
 
+# --- flow-level workload engine (flow_mode=1, core/workloads.py) ----------
+# Fixed per-rack flow-table width: the static slot axis the jitted step
+# compiles against. The *usable* prefix is the traced flow_table_cap
+# knob (<= this), so table pressure is sweepable with zero recompiles.
+FLOW_TABLE_SLOTS = 64
+# fixed per-arrival-event size-draw width (the incast fan-in ceiling):
+# like MAX_FAULT_LINKS, a fixed draw shape keeps every random stream
+# padding- and knob-invariant
+MAX_INCAST_DEGREE = 8
+# per-flow emission ceiling: 10G NIC ~= 1 pkt/tick — also the line rate
+# of the ideal-FCT baseline (workloads.ideal_fct_us)
+FLOW_LINE_RATE_PPT = 1.0
+# AIMD congestion window (pkts/tick): slow trickle start, additive
+# increase toward line rate, halve on the rack's hi-watermark signal
+FLOW_CWND_INIT_PPT = 0.25
+FLOW_CWND_MIN_PPT = 0.0625
+FLOW_AIMD_INCREASE_PPT = 0.02
+FLOW_AIMD_DECREASE = 0.5
+# FCT histogram: flows live 1e1..1e7 us, so 2 bins/octave spans
+# ~8 us * 2**23.5 ~= 9e7 us in the same 48-bin frame the delay
+# histogram machinery uses
+FCT_HIST_BINS = 48
+FCT_HIST_MIN_US = 8.0
+FCT_HIST_BINS_PER_OCTAVE = 2
+# FCT slowdown histogram (dimensionless, >= 1 by construction):
+# 4 bins/octave spans 1x..~3400x
+FCT_SLOWDOWN_HIST_BINS = 48
+FCT_SLOWDOWN_HIST_MIN = 1.0
+FCT_SLOWDOWN_HIST_BINS_PER_OCTAVE = 4
+
 # --- optical fault model (beyond-paper robustness axis) -------------------
 # Real optical DCN components are not the paper's perfect plane: wakes
 # jitter and transiently fail (PULSE-class timing margins; the Xue et al.

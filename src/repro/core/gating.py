@@ -149,6 +149,23 @@ def wake_stall_ticks(state: GateState) -> jnp.ndarray:
     return state.up_timer.astype(jnp.float32)
 
 
+def stall_attribution(gate: GateState, fault: FaultState, gating_on):
+    """(wake_stall, fault_stall) per switch, (S,) float32 each, masked
+    to exactly 0.0 when ``gating_on`` is False.
+
+    THE single stall-attribution pair: the simulator feeds it into both
+    the packet-delay histogram and the flow engine's FCT samples, so
+    wake/fault stalls attribute into flow completion times by
+    construction — there is no second attribution path to drift. The
+    mask belt-and-suspenders the structural invariants (``up_timer``
+    never leaves 0 without gating, the fallback never engages), keeping
+    the always-on attribution exactly zero.
+    """
+    wake = jnp.where(gating_on, wake_stall_ticks(gate), 0.0)
+    fstall = jnp.where(gating_on, fault_stall_ticks(fault), 0.0)
+    return wake, fstall
+
+
 def watermark_triggers(queues: jnp.ndarray, stage: jnp.ndarray,
                        *, cap: float, hi: float, lo: float,
                        link_valid=None):

@@ -74,6 +74,31 @@ mean/variance from the kernel's moment outputs.
 quantity and deliberately both reported: the first carries attribution
 and tails, the second is the paper's original headline metric.
 
+Flow-level workload engine (flow_mode=1)
+----------------------------------------
+``flow_mode=1`` replaces the rate-based edge with a flow abstraction
+inside the same jitted scan: a fixed-capacity per-rack flow table
+(``C.FLOW_TABLE_SLOTS`` static slots; the traced ``flow_table_cap``
+knob bounds the usable prefix) holding arrival tick, remaining
+packets, destination class and an AIMD congestion window per flow.
+Flow sizes are sampled in-scan from the heavy-tailed
+websearch/datamining CDFs of core/workloads.py (``flow_size_dist``);
+arrivals are per-rack Bernoulli events (``flow_arrival_rate``, default
+derived from the trace so both modes offer comparable load) spawning
+``incast_degree`` same-destination flows at once; table overflow is
+EVICTION, counted so started == completed + evicted + in-flight stays
+exact (the ``validate=True`` guard checks it per chunk). Completions
+bin into per-size-class (short/medium/long) FCT and FCT-slowdown
+histograms riding the same log-spaced machinery as the delay
+histogram; the path-delay part of each FCT is the tick's d_i/d_x
+sample, so wake/fault stalls attribute into FCT through the one
+``gating.stall_attribution`` seam. All of it is jnp.where-selected
+against the rate-based path — zero new compile sites, and
+``flow_mode=0`` is BIT-IDENTICAL to the pre-flow engine (the fault
+knobs' zero-knob discipline: dedicated fold_in branches, fixed draw
+widths, masked accumulator adds; tests/test_flows.py pins it against
+committed goldens).
+
 Batched multi-scenario sweeps
 -----------------------------
 Every per-scenario knob — the TrafficSpec fields, ``gating_enabled``,
@@ -176,9 +201,11 @@ import numpy as np
 
 from repro.core import constants as C
 from repro.core import gating
+from repro.core import workloads
 from repro.core.topology import (FBSite, full_site_tag, pad_hull,
                                  site_tag)
 from repro.core.traffic import (TRAFFIC_SPECS, TrafficSpec,
+                                flow_arrival_rate_per_tick,
                                 rack_flow_rate_per_tick, stack_specs)
 from repro.kernels import ops
 
@@ -204,8 +231,11 @@ CHUNK_TICKS = 10_000      # default scan chunk (accumulator fold period)
 #: fault-injection subsystem — fault knobs are Scenario leaves, results
 #: gain delivered/fault-drop/retry/connectivity metrics, and cache meta
 #: carries the fault fingerprint + validate flag so fault-free cached
-#: results never alias faulted runs)
-SIM_SCHEMA_VERSION = 6
+#: results never alias faulted runs; v7: flow-level workload engine —
+#: flow knobs are Scenario leaves, results gain flow/FCT metrics, and
+#: cache meta carries the flow fingerprint so flow-free cached results
+#: never alias flow runs)
+SIM_SCHEMA_VERSION = 7
 
 #: number of times the sweep step has been traced (the one-compile probe)
 TRACE_COUNT = 0
@@ -233,7 +263,8 @@ PARITY_KEYS = (
     "node_link_on_frac", "transceiver_power_w", "half_off_frac",
     "delay_p50_us", "delay_p99_us", "delay_queue_us",
     "delay_wake_stall_us", "delivered_frac", "fault_drop_frac",
-    "delay_fault_stall_us",
+    "delay_fault_stall_us", "flows_completed", "flow_evicted_frac",
+    "fct_slowdown_p99",
 )
 
 
@@ -253,29 +284,46 @@ def worst_parity(ref_results, new_results):
 #: histogram bin edges in us (len DELAY_HIST_BINS + 1; see module
 #: docstring). Bin i covers [edge[i], edge[i+1]); the last bin also
 #: absorbs anything beyond the final edge.
-DELAY_BIN_EDGES_US = np.concatenate([
-    [0.0],
-    C.DELAY_HIST_MIN_US
-    * 2.0 ** (np.arange(C.DELAY_HIST_BINS, dtype=np.float64)
-              / C.DELAY_HIST_BINS_PER_OCTAVE)])
+def _log_bin_edges(min_val: float, bins: int, bpo: float) -> np.ndarray:
+    """Edges of a log-spaced histogram frame (len bins + 1): bin 0 is
+    linear [0, min_val); bin i >= 1 covers [min * 2**((i-1)/bpo),
+    min * 2**(i/bpo)); the last bin absorbs overflow."""
+    return np.concatenate([
+        [0.0],
+        min_val * 2.0 ** (np.arange(bins, dtype=np.float64) / bpo)])
 
 
-def _delay_hist_add(hist, d, w):
-    """Bin weighted delay samples into the log-spaced histogram.
+DELAY_BIN_EDGES_US = _log_bin_edges(
+    C.DELAY_HIST_MIN_US, C.DELAY_HIST_BINS, C.DELAY_HIST_BINS_PER_OCTAVE)
+#: the flow engine's FCT / FCT-slowdown frames (same machinery, wider
+#: dynamic range; see constants.py)
+FCT_BIN_EDGES_US = _log_bin_edges(
+    C.FCT_HIST_MIN_US, C.FCT_HIST_BINS, C.FCT_HIST_BINS_PER_OCTAVE)
+FCT_SLOWDOWN_BIN_EDGES = _log_bin_edges(
+    C.FCT_SLOWDOWN_HIST_MIN, C.FCT_SLOWDOWN_HIST_BINS,
+    C.FCT_SLOWDOWN_HIST_BINS_PER_OCTAVE)
+
+
+def _delay_hist_add(hist, d, w, *, min_val=C.DELAY_HIST_MIN_US,
+                    bpo=C.DELAY_HIST_BINS_PER_OCTAVE,
+                    bins=C.DELAY_HIST_BINS):
+    """Bin weighted delay samples into a log-spaced histogram.
 
     d, w: (N,) sample values (us) and packet weights. Dense one-hot
     accumulation (no scatter, same trick as on_frac_hist); zero-weight
     rows contribute nothing, so padded hull rows are inert by
-    construction.
+    construction. The keyword frame (min/bins-per-octave/bin count)
+    defaults to the packet-delay histogram; the flow engine reuses the
+    same machinery for its FCT and slowdown frames.
     """
     # the 1e-4 nudge keeps exact edge values in their own (half-open)
     # bin under f32 log2 rounding; it shifts edges by ~0.001%, far
     # below the ~12% bin resolution
     idx = jnp.clip(
-        jnp.floor(jnp.log2(jnp.maximum(d, 1e-9) / C.DELAY_HIST_MIN_US)
-                  * C.DELAY_HIST_BINS_PER_OCTAVE + 1e-4),
-        -1, C.DELAY_HIST_BINS - 2).astype(jnp.int32) + 1
-    onehot = jnp.arange(C.DELAY_HIST_BINS)[None, :] == idx[:, None]
+        jnp.floor(jnp.log2(jnp.maximum(d, 1e-9) / min_val)
+                  * bpo + 1e-4),
+        -1, bins - 2).astype(jnp.int32) + 1
+    onehot = jnp.arange(bins)[None, :] == idx[:, None]
     return hist + jnp.sum(w[:, None] * onehot, axis=0)
 
 
@@ -323,6 +371,13 @@ class Scenario(NamedTuple):
     fault_prob: jax.Array       # f32 per-tick hard-fault hazard (1/MTBF)
     repair_ticks: jax.Array     # int32 hard-fault repair delay
     fault_fallback: jax.Array   # bool min-connectivity force-wake on/off
+    # flow-level workload engine (flow_mode=0 => the rate-based path
+    # above, bit-identical; sweepable with zero new compile sites)
+    flow_mode: jax.Array        # int32 0=rate-based, 1=flow engine
+    flow_rate: jax.Array        # f32 P(arrival event)/rack/tick
+    flow_dist: jax.Array        # int32 index into workloads.FLOW_DIST_NAMES
+    incast: jax.Array           # int32 flows per arrival event (fan-in)
+    flow_cap: jax.Array         # int32 usable flow-table slots (<= static)
     # site shape (real dims; <= the hull's static dims)
     ncl: jax.Array              # int32 n_clusters
     rpc: jax.Array              # int32 racks_per_cluster
@@ -339,6 +394,15 @@ class SimState(NamedTuple):
     flow_rem: jax.Array        # (R, F) int32 remaining packets
     flow_dest: jax.Array       # (R, F) int32 0=rack 1=cluster 2=inter
     flow_fast: jax.Array       # (R, F) bool: line-rate elephant
+    # flow engine (flow_mode=1): the fixed-capacity per-rack flow table
+    # (FT = C.FLOW_TABLE_SLOTS static slots; a slot is live while
+    # ft_rem > 0). All-zero and bit-inert at flow_mode=0.
+    tick: jax.Array            # () int32 tick counter (arrival stamps)
+    ft_start: jax.Array        # (R, FT) int32 arrival tick
+    ft_rem: jax.Array          # (R, FT) f32 remaining packets
+    ft_size: jax.Array        # (R, FT) int32 total flow size (pkts)
+    ft_dst: jax.Array          # (R, FT) int32 0=rack 1=cluster 2=inter
+    ft_cwnd: jax.Array         # (R, FT) f32 AIMD window (pkts/tick)
     rsw_q: jax.Array           # (R, P, 2) float [intra, inter]
     csw_up_q: jax.Array        # (NC, CUP) float
     csw_down_q: jax.Array      # (NC, RPC) float
@@ -354,6 +418,10 @@ class SimState(NamedTuple):
 #: SimParams fields forming the fault model's cache/meta fingerprint
 FAULT_KNOBS = ("wake_fail_prob", "wake_jitter_frac", "link_mtbf_ticks",
                "repair_ticks", "fault_fallback")
+
+#: SimParams fields forming the flow engine's cache/meta fingerprint
+FLOW_KNOBS = ("flow_mode", "flow_arrival_rate", "flow_size_dist",
+              "incast_degree", "flow_table_cap")
 
 
 @dataclass(frozen=True)
@@ -374,6 +442,15 @@ class SimParams:
     repair_ticks: int = 0          # hard-fault repair delay (>= 1 when
     #                                link_mtbf_ticks > 0)
     fault_fallback: bool = True    # min-connectivity force-wake
+    # flow-level workload engine (default = the legacy rate-based path)
+    flow_mode: int = 0             # 0=rate-based, 1=flow engine
+    flow_arrival_rate: float = 0.0  # P(arrival event)/rack/tick; 0 =>
+    #                                 derive from spec * rate_scale
+    #                                 (traffic.flow_arrival_rate_per_tick)
+    flow_size_dist: str = "websearch"  # workloads.FLOW_DIST_NAMES
+    incast_degree: int = 1         # flows per arrival event (fan-in),
+    #                                [1, C.MAX_INCAST_DEGREE]
+    flow_table_cap: int = C.FLOW_TABLE_SLOTS  # usable slots per rack
 
     def __post_init__(self):
         """Reject out-of-range knobs with a clear error instead of
@@ -409,6 +486,25 @@ class SimParams:
         if self.link_mtbf_ticks > 0.0 and self.repair_ticks < 1:
             bad("repair_ticks must be >= 1 when hard faults are "
                 f"enabled (link_mtbf_ticks={self.link_mtbf_ticks})")
+        if self.flow_mode not in (0, 1):
+            bad(f"flow_mode must be 0 (rate-based) or 1 (flow "
+                f"engine), got {self.flow_mode}")
+        if not 0.0 <= self.flow_arrival_rate <= 1.0:
+            bad("flow_arrival_rate must be in [0, 1] (per-tick "
+                f"Bernoulli; 0 derives from the trace), got "
+                f"{self.flow_arrival_rate}")
+        if self.flow_size_dist not in workloads.FLOW_DIST_NAMES:
+            bad(f"flow_size_dist must be one of "
+                f"{workloads.FLOW_DIST_NAMES}, got "
+                f"{self.flow_size_dist!r}")
+        if not 1 <= self.incast_degree <= C.MAX_INCAST_DEGREE:
+            bad(f"incast_degree must be in [1, "
+                f"{C.MAX_INCAST_DEGREE}] (the fixed draw width), got "
+                f"{self.incast_degree}")
+        if not 1 <= self.flow_table_cap <= C.FLOW_TABLE_SLOTS:
+            bad(f"flow_table_cap must be in [1, "
+                f"{C.FLOW_TABLE_SLOTS}] (the static table width), got "
+                f"{self.flow_table_cap}")
 
 
 def fault_fingerprint(p: "SimParams | None" = None) -> dict:
@@ -421,6 +517,18 @@ def fault_fingerprint(p: "SimParams | None" = None) -> dict:
         return {f.name: f.default for f in dataclasses.fields(SimParams)
                 if f.name in FAULT_KNOBS}
     return {k: getattr(p, k) for k in FAULT_KNOBS}
+
+
+def flow_fingerprint(p: "SimParams | None" = None) -> dict:
+    """The flow-knob dict joined into result-cache keys / metadata
+    (benchmarks/simcache.py) so flow-free cached results never alias
+    flow runs — the flow engine's ``fault_fingerprint`` analogue. With
+    no argument, returns the defaults (the rate-based path)."""
+    if p is None:
+        import dataclasses
+        return {f.name: f.default for f in dataclasses.fields(SimParams)
+                if f.name in FLOW_KNOBS}
+    return {k: getattr(p, k) for k in FLOW_KNOBS}
 
 
 @dataclass(frozen=True)
@@ -499,6 +607,17 @@ def _build_batch(runs: Sequence[tuple[SimParams, int]],
         repair_ticks=i32([p.repair_ticks for p in params]),
         fault_fallback=jnp.asarray([p.fault_fallback for p in params],
                                    bool),
+        flow_mode=i32([p.flow_mode for p in params]),
+        # explicit rate wins; 0 derives the legacy generator's expected
+        # spawn rate so the two modes offer comparable load
+        flow_rate=f32([p.flow_arrival_rate if p.flow_arrival_rate > 0.0
+                       else flow_arrival_rate_per_tick(
+                           p.spec, p.site.servers_per_rack,
+                           p.rate_scale) for p in params]),
+        flow_dist=i32([workloads.FLOW_DIST_NAMES.index(p.flow_size_dist)
+                       for p in params]),
+        incast=i32([p.incast_degree for p in params]),
+        flow_cap=i32([p.flow_table_cap for p in params]),
         ncl=i32([p.site.n_clusters for p in params]),
         rpc=i32([p.site.racks_per_cluster for p in params]),
         cpc=i32([p.site.csw_per_cluster for p in params]),
@@ -638,6 +757,18 @@ def _init_state(hull: FBSite, scen: Scenario, key) -> SimState:
         # post-serve occupancy moments from the switch kernel
         "rsw_occ_m1": jnp.zeros(()), "rsw_occ_m2": jnp.zeros(()),
         "csw_occ_m1": jnp.zeros(()), "csw_occ_m2": jnp.zeros(()),
+        # flow engine (all exactly 0 at flow_mode=0: no flow is ever
+        # admitted, every add below is masked to +0.0)
+        "flows_started": jnp.zeros(()),    # includes evicted arrivals
+        "flows_completed": jnp.zeros(()),
+        "flows_evicted": jnp.zeros(()),    # table-overflow rejections
+        "fct_sum": jnp.zeros(()),          # sum FCT (us) over completions
+        "fct_slow_sum": jnp.zeros(()),     # sum FCT/ideal slowdown
+        # per-size-class (short/medium/long) completion histograms:
+        # FCT in the FCT_BIN_EDGES_US frame, slowdown in the
+        # FCT_SLOWDOWN_BIN_EDGES frame
+        "fct_hist": jnp.zeros((3, C.FCT_HIST_BINS)),
+        "fct_slow_hist": jnp.zeros((3, C.FCT_SLOWDOWN_HIST_BINS)),
     }
     return SimState(
         key=key,
@@ -645,6 +776,12 @@ def _init_state(hull: FBSite, scen: Scenario, key) -> SimState:
         flow_rem=jnp.zeros((R, F_SLOTS), jnp.int32),
         flow_dest=jnp.zeros((R, F_SLOTS), jnp.int32),
         flow_fast=jnp.zeros((R, F_SLOTS), bool),
+        tick=jnp.zeros((), jnp.int32),
+        ft_start=jnp.zeros((R, C.FLOW_TABLE_SLOTS), jnp.int32),
+        ft_rem=jnp.zeros((R, C.FLOW_TABLE_SLOTS), jnp.float32),
+        ft_size=jnp.zeros((R, C.FLOW_TABLE_SLOTS), jnp.int32),
+        ft_dst=jnp.zeros((R, C.FLOW_TABLE_SLOTS), jnp.int32),
+        ft_cwnd=jnp.zeros((R, C.FLOW_TABLE_SLOTS), jnp.float32),
         rsw_q=jnp.zeros((R, P, 2)),
         csw_up_q=jnp.zeros((NC, s.csw_uplinks)),
         csw_down_q=jnp.zeros((NC, RPC)),
@@ -679,8 +816,12 @@ def _spawn_flows(scen: Scenario, k_u, k_z, rack_uid, rack_valid,
     wake = u[:, 1] < scen.p_off_on
     burst_on = jnp.where(burst_on, stay_on, wake)
 
-    # padded hull rows never spawn: they stay empty forever
-    spawn = (u[:, 2] < scen.p_spawn) & burst_on & rack_valid
+    # padded hull rows never spawn: they stay empty forever; with the
+    # flow engine selected (flow_mode=1) the legacy table never fills
+    # (the mask is a scalar True at flow_mode=0, so the rate-based
+    # path's draws and spawns are bit-untouched)
+    spawn = (u[:, 2] < scen.p_spawn) & burst_on & rack_valid \
+        & (scen.flow_mode == 0)
 
     # lognormal mixture sizes -> packets (1250 B per packet)
     pick_mix = u[:, 3] < scen.size_w
@@ -780,6 +921,97 @@ def make_sim_step(hull: FBSite):
             [jnp.sum(emit & (flow_dest == d), axis=1) for d in (0, 1, 2)],
             axis=1).astype(jnp.float32)                          # (R,3)
         flow_rem = jnp.maximum(flow_rem - emit.astype(jnp.int32), 0)
+
+        # 1b. flow-level workload engine (flow_mode=1): fixed-capacity
+        # per-rack flow table, pFabric-style heavy-tailed sizes
+        # (core/workloads.py), AIMD cwnd — all array ops selected
+        # against the rate-based path above by jnp.where, so both modes
+        # share ONE compiled program and flow_mode=0 stays bit-identical
+        # to the pre-flow engine (the fault-knob discipline: dedicated
+        # fold_in branches, fixed draw widths, masked accumulator adds).
+        flow_on = scen.flow_mode > 0
+        tick_now = state.tick + 1
+        FT = C.FLOW_TABLE_SLOTS
+        k_fa = jax.random.fold_in(k_u, 0x7F000003)   # arrival + dst
+        k_fs = jax.random.fold_in(k_u, 0x7F000004)   # flow sizes
+        ka = jax.vmap(lambda i: jax.random.fold_in(k_fa, i))(rack_uid)
+        ua = jax.vmap(lambda k: jax.random.uniform(k, (2,)))(ka)
+        ks = jax.vmap(lambda i: jax.random.fold_in(k_fs, i))(rack_uid)
+        us = jax.vmap(lambda k: jax.random.uniform(
+            k, (C.MAX_INCAST_DEGREE,)))(ks)          # fixed draw width
+        # one arrival EVENT spawns `incast` flows converging on the
+        # same destination class (the fan-in pattern that stresses the
+        # table and the watermark controller together)
+        arrive = (ua[:, 0] < scen.flow_rate) & rack_valid & flow_on
+        n_new = jnp.where(arrive, scen.incast, 0)            # (R,)
+        sizes = workloads.sample_flow_size_pkts(
+            us, scen.flow_dist)                              # (R,W) f32
+        ud2 = ua[:, 1]
+        fdst = jnp.where(
+            ud2 < scen.p_intra_rack, 0,
+            jnp.where(ud2 < scen.p_intra_rack + scen.p_intra_cluster,
+                      1, 2)).astype(jnp.int32)               # (R,)
+        # admission: rank the usable free slots (traced flow_cap caps
+        # the static FT axis) and match candidate k to the k-th free
+        # slot — a whole incast burst admits in one tick, overflow is
+        # EVICTION (counted; started == completed + evicted + in-flight
+        # stays exact)
+        slot_i = jnp.arange(FT)[None, :]
+        usable_slot = slot_i < scen.flow_cap                 # (1,FT)
+        pre_live = (state.ft_rem > 0.0) & usable_slot        # (R,FT)
+        free = ~pre_live & usable_slot
+        rank = jnp.cumsum(free.astype(jnp.int32), axis=1) - 1
+        cand = jnp.arange(C.MAX_INCAST_DEGREE)
+        want = cand[None, :] < n_new[:, None]                # (R,W)
+        place = (free[:, :, None]
+                 & (rank[:, :, None] == cand[None, None, :])
+                 & want[:, None, :])                         # (R,FT,W)
+        admitted = jnp.any(place, axis=1)                    # (R,W)
+        placed = jnp.any(place, axis=2)                      # (R,FT)
+        new_sz = jnp.sum(jnp.where(place, sizes[:, None, :], 0.0),
+                         axis=2)                             # (R,FT)
+        # AIMD on the PREVIOUS tick's live flows: halve on the rack's
+        # hi-watermark congestion signal (previous tick's RSW queues —
+        # the 1-tick feedback delay of a real rack-local signal),
+        # additive increase toward line rate otherwise
+        cong, _ = gating.watermark_triggers(
+            jnp.sum(state.rsw_q, axis=2), state.rsw_gate.stage,
+            cap=scen.queue_cap, hi=scen.hi, lo=scen.lo)
+        ft_cwnd = jnp.where(
+            pre_live,
+            jnp.where(cong[:, None],
+                      jnp.maximum(state.ft_cwnd * C.FLOW_AIMD_DECREASE,
+                                  C.FLOW_CWND_MIN_PPT),
+                      jnp.minimum(state.ft_cwnd
+                                  + C.FLOW_AIMD_INCREASE_PPT,
+                                  C.FLOW_LINE_RATE_PPT)),
+            state.ft_cwnd)
+        ft_start = jnp.where(placed, tick_now, state.ft_start)
+        ft_rem = jnp.where(placed, new_sz, state.ft_rem)
+        ft_size = jnp.where(placed, new_sz.astype(jnp.int32),
+                            state.ft_size)
+        ft_dst = jnp.where(placed, fdst[:, None], state.ft_dst)
+        ft_cwnd = jnp.where(placed, C.FLOW_CWND_INIT_PPT, ft_cwnd)
+        # emission: every live flow sends min(rem, cwnd) this tick
+        # (fluid, like the aggregation tiers); the last fraction
+        # completes the flow
+        ft_live = (ft_rem > 0.0) & usable_slot
+        emit_f = jnp.where(ft_live, jnp.minimum(ft_rem, ft_cwnd), 0.0)
+        ft_rem = ft_rem - emit_f
+        done = ft_live & (ft_rem <= 0.0)                     # (R,FT)
+        flow_by_dest = jnp.stack(
+            [jnp.sum(jnp.where(ft_dst == d, emit_f, 0.0), axis=1)
+             for d in (0, 1, 2)], axis=1)                    # (R,3)
+        # select the traffic edge the datapath sees; at flow_mode=0
+        # every flow accumulator add below is exactly +0.0
+        by_dest = jnp.where(flow_on, flow_by_dest, by_dest)
+        n_holding = jnp.where(
+            flow_on, jnp.sum(ft_live, axis=1).astype(jnp.float32),
+            n_holding)
+        acc["flows_started"] += jnp.sum(n_new).astype(jnp.float32)
+        acc["flows_evicted"] += (jnp.sum(n_new)
+                                 - jnp.sum(admitted)).astype(jnp.float32)
+
         acc["injected"] += jnp.sum(by_dest[:, 1:])
         acc["intra_rack"] += jnp.sum(by_dest[:, 0])
 
@@ -959,19 +1191,17 @@ def make_sim_step(hull: FBSite):
         # stage-up at the switches this rack's packets traverse; exactly
         # zero with gating disabled (up_timer never leaves 0, and the
         # attribution is masked besides)
+        # wake + fault-forced stalls through the ONE attribution seam
+        # (gating.stall_attribution): the same pair feeds the delay
+        # histogram below AND the flow FCT samples, so gating stalls
+        # attribute into flow completion times by construction; both
+        # are EXACTLY 0 when gating is off
         g_on = scen.gating_enabled
-        stall_rsw = jnp.where(g_on, gating.wake_stall_ticks(
-            state.rsw_gate), 0.0)                                # (R,)
-        stall_csw = jnp.where(g_on, gating.wake_stall_ticks(
-            state.csw_gate), 0.0)                                # (NC,)
+        stall_rsw, fstall_rsw = gating.stall_attribution(
+            state.rsw_gate, state.rsw_fault, g_on)               # (R,)
+        stall_csw, fstall_csw = gating.stall_attribution(
+            state.csw_gate, state.csw_fault, g_on)               # (NC,)
         stall_csw_cl = cl_avg(stall_csw)
-        # fault-forced wake stalls (min-connectivity fallback): the
-        # third attribution bin; the fallback only engages under
-        # gating, and the mask keeps it EXACTLY 0 when gating is off
-        fstall_rsw = jnp.where(g_on, gating.fault_stall_ticks(
-            state.rsw_fault), 0.0)                               # (R,)
-        fstall_csw = jnp.where(g_on, gating.fault_stall_ticks(
-            state.csw_fault), 0.0)                               # (NC,)
         fstall_csw_cl = cl_avg(fstall_csw)
 
         def per_rack(x_cl):                                      # (NCL,)->(R,)
@@ -999,6 +1229,47 @@ def make_sim_step(hull: FBSite):
             + jnp.sum(wt_x * (s_x > 0))
         acc["fault_stall_pkts"] += jnp.sum(wt_i * (f_i > 0)) \
             + jnp.sum(wt_x * (f_x > 0))
+
+        # 8.6 flow completion times (flow_mode=1; every weight below is
+        # exactly 0 at flow_mode=0). FCT = table residence + THIS
+        # tick's sampled path delay for the flow's class — d_i/d_x
+        # already carry queue waits plus the wake/fault stalls, so
+        # gating stalls attribute into FCT through the same seam as the
+        # delay histogram. Slowdown is vs the ideal-bandwidth baseline
+        # (line-rate serialization + unloaded path); residence >= size
+        # (per-tick emission <= line rate) and path >= the unloaded
+        # path, so slowdown >= 1 by construction.
+        wdone = done.astype(jnp.float32)                     # (R,FT)
+        residence = (tick_now - ft_start + 1).astype(jnp.float32)
+        path_us = jnp.where(
+            ft_dst == 2, d_x[:, None],
+            jnp.where(ft_dst == 1, d_i[:, None], STACK_US))
+        fct_us = residence * C.TICK_US + path_us
+        ideal_base = jnp.where(
+            ft_dst == 2, base_i + 2.0 * WIRE_HOP_US,
+            jnp.where(ft_dst == 1, base_i, STACK_US))
+        ideal_us = workloads.ideal_fct_us(ft_size, ideal_base)
+        slow = fct_us / ideal_us
+        cls = workloads.flow_size_class(ft_size)             # (R,FT)
+        fct_flat = fct_us.reshape(-1)
+        slow_flat = slow.reshape(-1)
+        for c in range(3):
+            wc = (wdone * (cls == c)).reshape(-1)
+            acc["fct_hist"] = acc["fct_hist"].at[c].set(
+                _delay_hist_add(
+                    acc["fct_hist"][c], fct_flat, wc,
+                    min_val=C.FCT_HIST_MIN_US,
+                    bpo=C.FCT_HIST_BINS_PER_OCTAVE,
+                    bins=C.FCT_HIST_BINS))
+            acc["fct_slow_hist"] = acc["fct_slow_hist"].at[c].set(
+                _delay_hist_add(
+                    acc["fct_slow_hist"][c], slow_flat, wc,
+                    min_val=C.FCT_SLOWDOWN_HIST_MIN,
+                    bpo=C.FCT_SLOWDOWN_HIST_BINS_PER_OCTAVE,
+                    bins=C.FCT_SLOWDOWN_HIST_BINS))
+        acc["flows_completed"] += jnp.sum(wdone)
+        acc["fct_sum"] += jnp.sum(fct_us * wdone)
+        acc["fct_slow_sum"] += jnp.sum(slow * wdone)
 
         # 9. watermark controllers. Per Sec III-B the backlog monitor
         # watches ALL output queues of a switch: the RSW trigger combines
@@ -1124,6 +1395,8 @@ def make_sim_step(hull: FBSite):
         acc["on_frac_hist"] += (jnp.arange(4) == bucket)  # one-hot, no scatter
 
         return SimState(key, burst_on, flow_rem, flow_dest, flow_fast,
+                        tick_now, ft_start, ft_rem, ft_size, ft_dst,
+                        ft_cwnd,
                         rsw_q, csw_up_q, csw_down_q, fc_down_q,
                         rsw_gate, csw_gate,
                         gating.FaultState(rsw_timer, rsw_fwake),
@@ -1250,6 +1523,18 @@ def _sweep_chunk_impl(site: FBSite, scen: Scenario, state: SimState,
         resid = inj - (tot["csw_down_served"] + tot["drops"]
                        + tot["fault_drops"] + in_flight.astype(inj.dtype))
         ok &= jnp.abs(resid) <= tol * jnp.maximum(inj, 1.0)
+        # flow-conservation identity (exactly 0 residual at
+        # flow_mode=0, where every term is 0): started == completed +
+        # evicted + in-table; in-table counts the live usable slots of
+        # the end-of-chunk flow table
+        in_table = jnp.sum(
+            (out.ft_rem > 0.0)
+            & (jnp.arange(C.FLOW_TABLE_SLOTS)[None, None, :]
+               < scen.flow_cap[:, None, None]), axis=(1, 2))
+        started = tot["flows_started"]
+        fresid = started - (tot["flows_completed"] + tot["flows_evicted"]
+                            + in_table.astype(started.dtype))
+        ok &= jnp.abs(fresid) <= tol * jnp.maximum(started, 1.0)
     else:
         # host-fold path: the running totals are host-side; guard the
         # chunk's own accumulators for finiteness only
@@ -1640,15 +1925,17 @@ def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
     return results
 
 
-def _hist_quantile(hist: np.ndarray, q: float) -> float:
-    """Quantile of a log-binned delay histogram (DELAY_BIN_EDGES_US),
-    log-linearly interpolated within the crossing bin."""
+def _hist_quantile(hist: np.ndarray, q: float,
+                   edges: np.ndarray = DELAY_BIN_EDGES_US) -> float:
+    """Quantile of a log-binned histogram (default frame:
+    DELAY_BIN_EDGES_US; the flow engine passes its FCT / slowdown
+    frames), log-linearly interpolated within the crossing bin."""
     total = float(np.sum(hist))
     if total <= 0.0:
         return 0.0
     cdf = np.cumsum(hist) / total
     i = min(int(np.searchsorted(cdf, q)), len(hist) - 1)
-    lo_e, hi_e = DELAY_BIN_EDGES_US[i], DELAY_BIN_EDGES_US[i + 1]
+    lo_e, hi_e = edges[i], edges[i + 1]
     prev = float(cdf[i - 1]) if i > 0 else 0.0
     frac = (q - prev) / max(float(cdf[i]) - prev, 1e-12)
     frac = min(max(frac, 0.0), 1.0)
@@ -1768,7 +2055,52 @@ def _finalize(a: dict, site: FBSite, n_ticks: int, gating_enabled: bool,
         "wake_stall_frac": float(a["wake_stall_pkts"]) / wt,
         "fault_stall_frac": float(a["fault_stall_pkts"]) / wt,
         **occ,
+        **_finalize_flows(a),
     }
+
+
+def _finalize_flows(a: dict) -> dict:
+    """Flow-engine metrics (all exactly 0 / empty-normalized at
+    flow_mode=0, where every flow accumulator is exactly zero):
+    per-size-class FCT p50/p99 + slowdown percentiles vs the
+    ideal-bandwidth baseline, and the flow-conservation census."""
+    fct_hist = np.asarray(a["fct_hist"], np.float64)       # (3, bins)
+    slow_hist = np.asarray(a["fct_slow_hist"], np.float64)
+    started = float(a["flows_started"])
+    completed = float(a["flows_completed"])
+    n_done = max(completed, 1e-9)
+    out = {
+        "flows_started": started,
+        "flows_completed": completed,
+        "flows_evicted": float(a["flows_evicted"]),
+        "flow_evicted_frac": float(a["flows_evicted"])
+        / max(started, 1e-9),
+        "fct_mean_us": float(a["fct_sum"]) / n_done,
+        "fct_slowdown_mean": float(a["fct_slow_sum"]) / n_done,
+        # aggregate (all classes) percentiles
+        "fct_p50_us": _hist_quantile(fct_hist.sum(0), 0.50,
+                                     FCT_BIN_EDGES_US),
+        "fct_p99_us": _hist_quantile(fct_hist.sum(0), 0.99,
+                                     FCT_BIN_EDGES_US),
+        "fct_slowdown_p50": _hist_quantile(slow_hist.sum(0), 0.50,
+                                           FCT_SLOWDOWN_BIN_EDGES),
+        "fct_slowdown_p99": _hist_quantile(slow_hist.sum(0), 0.99,
+                                           FCT_SLOWDOWN_BIN_EDGES),
+        # normalized per-class slowdown distributions (rows in
+        # FLOW_CLASS_NAMES order, bins in FCT_SLOWDOWN_BIN_EDGES)
+        "fct_slow_hist": (slow_hist / n_done).tolist(),
+    }
+    for c, cname in enumerate(workloads.FLOW_CLASS_NAMES):
+        out[f"flows_completed_{cname}"] = float(fct_hist[c].sum())
+        out[f"fct_p50_us_{cname}"] = _hist_quantile(
+            fct_hist[c], 0.50, FCT_BIN_EDGES_US)
+        out[f"fct_p99_us_{cname}"] = _hist_quantile(
+            fct_hist[c], 0.99, FCT_BIN_EDGES_US)
+        out[f"fct_slowdown_p50_{cname}"] = _hist_quantile(
+            slow_hist[c], 0.50, FCT_SLOWDOWN_BIN_EDGES)
+        out[f"fct_slowdown_p99_{cname}"] = _hist_quantile(
+            slow_hist[c], 0.99, FCT_SLOWDOWN_BIN_EDGES)
+    return out
 
 
 def _sim_program(hull: FBSite, scen: Scenario, n_ticks: int):

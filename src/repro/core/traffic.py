@@ -187,3 +187,17 @@ def rack_flow_rate_per_tick(spec: TrafficSpec, servers_per_rack: int = 48,
         duty = spec.p_off_on / (spec.p_off_on + spec.p_on_off)
     # compensate for OFF periods so the long-run rate matches the IAT dist
     return rate / max(duty, 1e-6)
+
+
+def flow_arrival_rate_per_tick(spec: TrafficSpec,
+                               servers_per_rack: int = 48,
+                               rate_scale: float = 1.0) -> float:
+    """Default per-rack flow-ARRIVAL-EVENT rate of the flow engine
+    (``flow_mode=1``, P(arrival)/rack/tick, capped at 1): the legacy
+    rate-based generator's expected spawn rate under the same
+    ``rate_scale``, so the two modes offer comparable load and the
+    savings-vs-FCT frontier (benchmarks/bench_flows.py) is an
+    apples-to-apples axis. ``SimParams.flow_arrival_rate`` overrides it
+    when nonzero."""
+    return min(rack_flow_rate_per_tick(spec, servers_per_rack)
+               * rate_scale, 1.0)

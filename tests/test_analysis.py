@@ -398,10 +398,13 @@ def test_shipped_registry_round_trips():
     assert cfg.blessed("src/repro/core/simulator.py") == \
         {"_start_sweep", "_finish_sweep"}
     sc = cfg.raw["scenario_contract"]
-    assert sc["schema_version"] == 6
+    assert sc["schema_version"] == 7
     assert list(sc["fingerprint_params"]) == [
         "wake_fail_prob", "wake_jitter_frac", "link_mtbf_ticks",
         "repair_ticks", "fault_fallback"]
+    assert list(sc["flow_fingerprint_params"]) == [
+        "flow_mode", "flow_arrival_rate", "flow_size_dist",
+        "incast_degree", "flow_table_cap"]
 
 
 def test_rules_table_is_complete():
