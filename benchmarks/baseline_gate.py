@@ -34,6 +34,10 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
+# atomic temp+rename writes: an interrupted bench run must never leave
+# a truncated committed baseline or trajectory record behind
+from repro.core.checkpoint import atomic_write_text
+
 BASELINE = Path(__file__).resolve().with_name("baselines.json")
 CHANGES = Path(__file__).resolve().parents[1] / "CHANGES.md"
 
@@ -67,7 +71,7 @@ def merge_trajectory(bench: str, record: dict) -> Path:
             data = {}
     data["pr"] = pr_index()
     data[bench] = record
-    path.write_text(json.dumps(data, indent=1) + "\n")
+    atomic_write_text(path, json.dumps(data, indent=1) + "\n")
     return path
 
 
@@ -95,7 +99,7 @@ def bless_section(bench: str, mode: str, values: dict,
     data = _load_all()
     data["schema"] = 2
     data[bench] = {"mode": mode, "values": values, "bands": bands}
-    BASELINE.write_text(json.dumps(data, indent=1) + "\n")
+    atomic_write_text(BASELINE, json.dumps(data, indent=1) + "\n")
 
 
 def check_bands(current: dict, section: dict) -> list:

@@ -27,6 +27,13 @@ baseline (benchmarks/baselines.json) under ``--check-baseline``:
    single-hull results. The bucketing report is also written to
    results/bench_planner_report.json (a CI build artifact).
 
+4. checkpoint overhead — the same mix with cadenced durability
+   snapshots (core/checkpoint.py) vs plain: the overhead ratio (the
+   deferred-by-one snapshot writes must throttle, not serialize, the
+   async chunk pipeline), the ``1 + n_checkpoints`` host-transfer pin,
+   and the BIT-exact (rel diff == 0.0) parity of both the checkpointed
+   run and a ``resume_sweep`` from its last mid-run snapshot.
+
 Under ``--check-baseline`` the run additionally merges a
 machine-readable perf-trajectory record into the repo root's
 ``BENCH_<n>.json`` (n = the PR index derived from CHANGES.md; speedups,
@@ -53,15 +60,17 @@ from __future__ import annotations
 
 import argparse
 import json
+import tempfile
 import time
 from pathlib import Path
 
 from benchmarks import baseline_gate as BG
+from repro.core import checkpoint as CK
 from repro.core import simulator as S
-from repro.core.simulator import (SimParams, grid_runs, make_batch,
-                                  make_multi_site_batch, run_sim,
-                                  run_sweep, run_sweep_planned,
-                                  worst_parity)
+from repro.core.simulator import (CheckpointSpec, SimParams, grid_runs,
+                                  make_batch, make_multi_site_batch,
+                                  resume_sweep, run_sim, run_sweep,
+                                  run_sweep_planned, worst_parity)
 from repro.core.topology import FBSite
 from repro.core.traffic import TRAFFIC_SPECS
 
@@ -104,6 +113,14 @@ DEFAULT_BANDS = {
     "planner_traces": {"equal": True},
     # async bucket pipeline: exactly one fold fetch per bucket
     "host_transfers_per_bucket": {"max_abs": 1.0},
+    # durability: checkpointing only OBSERVES a run (bit-exact parity,
+    # rel diff == 0.0 — no epsilon), the snapshot fetches are pinned at
+    # 1 + n_checkpoints, and the deferred-by-one writes keep the
+    # overhead a bounded ratio of the plain run's wall clock
+    "ckpt_overhead_ratio": {"max_abs": 2.0},
+    "ckpt_max_rel_diff": {"max_abs": 0.0},
+    "ckpt_host_transfers": {"equal": True},
+    "ckpt_n_checkpoints": {"equal": True},
 }
 
 
@@ -302,6 +319,79 @@ def bench_planner(args) -> dict:
     }
 
 
+def bench_checkpoint(args) -> dict:
+    """Checkpointed vs plain device-fold run on the bimodal mix
+    (multi-chunk): the cadenced snapshots (core/checkpoint.py) must
+    only OBSERVE the run — bit-exact metric parity (rel diff == 0.0,
+    no epsilon) for both the checkpointed run and a resume_sweep from
+    its last mid-run snapshot — while the deferred-by-one writes keep
+    the device pipeline busy (overhead gated as a ratio of the plain
+    run) and the fetch count is pinned at exactly 1 + n_checkpoints."""
+    ticks, chunk = (1_500, 100) if args.smoke else (8_000, 400)
+    if args.ticks:
+        ticks, chunk = args.ticks, max(1, args.ticks // 15)
+    n_chunks = -(-ticks // chunk)
+    every = max(1, n_chunks // 4)
+    # snapshot boundaries: every cadence'th chunk boundary, final
+    # boundary excluded (a finished run needs no checkpoint)
+    n_ckpt = sum(1 for ci in range(1, n_chunks) if ci % every == 0)
+    batch = make_multi_site_batch(_bimodal_runs())
+    print(f"\ncheckpoint: bimodal mix as one hull, {ticks} ticks in "
+          f"{n_chunks} chunks of {chunk}, snapshot every {every} "
+          f"chunk(s) -> {n_ckpt} checkpoint(s)")
+
+    # warm the shared fold program (same (hull, B, chunk) key)
+    run_sweep(batch, 2 * chunk, chunk_ticks=chunk)
+
+    with tempfile.TemporaryDirectory() as td:
+        spec = CheckpointSpec(directory=Path(td), every_chunks=every,
+                              tag="bench", keep=max(1, n_ckpt))
+        # best-of-4 reps, order swapped each rep (same rationale as
+        # bench_fold: allocator noise + order bias)
+        t_plain = t_ckpt = float("inf")
+        for rep in range(4):
+            for which in (("plain", "ckpt") if rep % 2 == 0
+                          else ("ckpt", "plain")):
+                h0 = S.HOST_TRANSFER_COUNT
+                t0 = time.time()
+                if which == "plain":
+                    plain_res = run_sweep(batch, ticks, chunk_ticks=chunk)
+                    t_plain = min(t_plain, time.time() - t0)
+                else:
+                    ckpt_res = run_sweep(batch, ticks, chunk_ticks=chunk,
+                                         checkpoint=spec)
+                    t_ckpt = min(t_ckpt, time.time() - t0)
+                    transfers_ckpt = S.HOST_TRANSFER_COUNT - h0
+
+        # resume from the newest mid-run snapshot: must land on the
+        # exact same metrics as the uninterrupted runs
+        latest = CK.latest_checkpoint(Path(td), "bench")
+        resumed = resume_sweep(latest)
+
+    w_ckpt, k_ckpt = worst_parity(plain_res, ckpt_res)
+    w_res, k_res = worst_parity(plain_res, resumed)
+    worst, worst_key = max((w_ckpt, k_ckpt), (w_res, k_res))
+    overhead = t_ckpt / t_plain
+    ok = (worst == 0.0 and transfers_ckpt == 1 + n_ckpt)
+    print(f"plain run    : {t_plain:7.2f} s")
+    print(f"checkpointed : {t_ckpt:7.2f} s  ({overhead:.2f}x plain), "
+          f"{transfers_ckpt} host transfer(s) "
+          f"(require exactly 1 + {n_ckpt})")
+    print(f"max ckpt/resume-vs-plain rel diff: {worst:.2e} [{worst_key}] "
+          f"{'OK' if ok else '!= 0.0 or transfer pin broken'}")
+    return {
+        "ckpt_ticks": ticks, "ckpt_chunks": n_chunks,
+        "ckpt_every_chunks": every,
+        "ckpt_n_checkpoints": n_ckpt,
+        "t_ckpt_plain_s": round(t_plain, 3),
+        "t_ckpt_checkpointed_s": round(t_ckpt, 3),
+        "ckpt_overhead_ratio": round(overhead, 3),
+        "ckpt_host_transfers": transfers_ckpt,
+        "ckpt_max_rel_diff": worst, "ckpt_max_rel_diff_key": worst_key,
+        "ckpt_metrics_match": ok,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ticks", type=int, default=None)
@@ -319,6 +409,7 @@ def main() -> None:
     results.update(bench_serial_vs_batched(args))
     results.update(bench_fold(args))
     results.update(bench_planner(args))
+    results.update(bench_checkpoint(args))
 
     out = OUT.with_name("bench_sweep_smoke.json") if args.smoke else OUT
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -327,7 +418,8 @@ def main() -> None:
 
     mode = "smoke" if args.smoke else "full"
     sane = (results["metrics_match"] and results["planner_metrics_match"]
-            and results["fold_metrics_match"])
+            and results["fold_metrics_match"]
+            and results["ckpt_metrics_match"])
     if args.update_baseline:
         # never bless a run that failed its own parity checks — a
         # broken run must not become the new reference
@@ -388,6 +480,12 @@ def main() -> None:
                 "savings_frac": results["planner_savings_frac"],
                 "waste_frac": results["planner_waste_frac"],
             },
+            "durability": {
+                "n_checkpoints": results["ckpt_n_checkpoints"],
+                "host_transfers": results["ckpt_host_transfers"],
+                "overhead_ratio": results["ckpt_overhead_ratio"],
+                "max_rel_diff": results["ckpt_max_rel_diff"],
+            },
             "timings_s": {
                 "batched": results["t_batched_s"],
                 "serial": results["t_serial_s"],
@@ -395,6 +493,8 @@ def main() -> None:
                 "fold_host": results["t_fold_host_s"],
                 "planned": results["t_planned_s"],
                 "single_hull": results["t_single_hull_s"],
+                "ckpt_plain": results["t_ckpt_plain_s"],
+                "ckpt_checkpointed": results["t_ckpt_checkpointed_s"],
             },
         }
         trajectory = BG.merge_trajectory("bench_sweep", record)

@@ -22,6 +22,8 @@ import time
 from pathlib import Path
 
 from repro.core import planner
+from repro.core.checkpoint import (CKPT_SCHEMA_VERSION, CheckpointSpec,
+                                   atomic_write_text)
 from repro.core.simulator import (SIM_SCHEMA_VERSION, SimParams,
                                   execution_mode, fault_fingerprint,
                                   flow_fingerprint, run_sweep_planned)
@@ -43,13 +45,19 @@ def _cache_meta(site: FBSite, ticks: int, max_compiles: int) -> dict:
     # "faults"/"flows" pin the default (all-off) fault and flow knobs
     # and "validate" the guard mode: results cached before either model
     # existed, or under different knob defaults, never serve a
-    # fault-aware or flow-aware run
+    # fault-aware or flow-aware run. "ckpt_schema" records the
+    # durability layer the run could have resumed through — NOT whether
+    # checkpointing was on: checkpointing only observes a run
+    # (bit-identical on or off, pinned by tests/test_durability.py), so
+    # a checkpointed and an uncheckpointed run rightly share a cache
+    # entry, but a resume through an incompatible checkpoint layout
+    # can't have produced these results
     return {"sim_schema": SIM_SCHEMA_VERSION, "ticks": ticks,
             "site": dataclasses.asdict(site),
             "plan": _plan(site, max_compiles).fingerprint,
             "exec": execution_mode(n_scenarios=_RUNS_PER_TRACE),
             "faults": fault_fingerprint(), "flows": flow_fingerprint(),
-            "validate": False}
+            "validate": False, "ckpt_schema": CKPT_SCHEMA_VERSION}
 
 
 def _cache_path(site: FBSite, ticks: int) -> Path:
@@ -62,7 +70,8 @@ def _cache_path(site: FBSite, ticks: int) -> Path:
 
 
 def get_results(ticks: int = TICKS, force: bool = False,
-                site: FBSite = FBSite(), max_compiles: int = 1) -> dict:
+                site: FBSite = FBSite(), max_compiles: int = 1,
+                checkpoint: CheckpointSpec | None = None) -> dict:
     meta = _cache_meta(site, ticks, max_compiles)
     out = _cache_path(site, ticks)
     data = {"meta": meta, "ticks": ticks, "traces": {}}
@@ -82,13 +91,20 @@ def get_results(ticks: int = TICKS, force: bool = False,
     for name in missing:
         spec = TRAFFIC_SPECS[name]
         t0 = time.time()
+        # the optional CheckpointSpec rides through (per-trace tag so
+        # traces don't prune each other); it does NOT join the cache
+        # key — checkpointing is observation-only, bit-identical on/off
+        cs = None if checkpoint is None else dataclasses.replace(
+            checkpoint, tag=f"{checkpoint.tag}-{name}")
         lc, base = run_sweep_planned(
             [(SimParams(spec=spec, site=site, gating_enabled=True), 0),
              (SimParams(spec=spec, site=site, gating_enabled=False), 0)],
-            ticks, max_compiles=max_compiles)
+            ticks, max_compiles=max_compiles, checkpoint=cs)
         data["traces"][name] = {
             "lcdc": lc, "baseline": base,
             "wall_s": round(time.time() - t0, 1),
         }
-        out.write_text(json.dumps(data, indent=1))   # incremental save
+        # atomic incremental save: a mid-run interrupt keeps every
+        # finished trace servable instead of truncating the cache
+        atomic_write_text(out, json.dumps(data, indent=1))
     return data

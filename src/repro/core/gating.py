@@ -78,7 +78,9 @@ def fault_init(n_switches: int, n_links: int) -> FaultState:
 
 def fault_arrivals(timer: jnp.ndarray, u: jnp.ndarray,
                    powered: jnp.ndarray, link_real: jnp.ndarray,
-                   fault_prob, repair_ticks):
+                   fault_prob, repair_ticks,
+                   plane_u: jnp.ndarray | None = None,
+                   plane_fail_prob=0.0):
     """One tick of hard transceiver faults: Bernoulli arrivals on
     powered, healthy, REAL links (a dark or padded transceiver cannot
     die), then the repair countdown.
@@ -90,9 +92,24 @@ def fault_arrivals(timer: jnp.ndarray, u: jnp.ndarray,
     (the simulator drops the dying link's queued packets into the
     fault-drop bin on it). ``fault_prob == 0`` leaves an all-zero timer
     all-zero — bit-inert.
+
+    ``plane_u``/``plane_fail_prob`` model CORRELATED failure domains: a
+    shared component (e.g. the laser comb feeding one optical plane)
+    dying takes every link it feeds down in the same tick. ``plane_u``
+    is an (S, L) uniform field in which all links of one plane carry
+    the SAME draw (the caller broadcasts one draw per physical domain),
+    so ``plane_u < plane_fail_prob`` strikes whole columns at once; the
+    hit still only lands on powered, healthy, real links, and repairs
+    share the per-link countdown. With ``plane_fail_prob == 0`` the OR
+    adds an all-False mask (uniforms are >= 0, strict ``<``), so the
+    default is structurally bit-inert — no epsilon, no new per-link
+    stream consumed.
     """
     healthy = timer == 0
-    new_fault = healthy & powered & link_real & (u < fault_prob)
+    hazard = u < fault_prob
+    if plane_u is not None:
+        hazard = hazard | (plane_u < plane_fail_prob)
+    new_fault = healthy & powered & link_real & hazard
     timer = jnp.where(new_fault, jnp.asarray(repair_ticks, jnp.int32),
                       jnp.maximum(timer - 1, 0))
     return timer.astype(jnp.int32), new_fault

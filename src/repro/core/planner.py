@@ -179,6 +179,14 @@ class SweepPlan:
             sort_keys=True)
         return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
+    def bucket_tag(self, k: int) -> str:
+        """Stable per-bucket checkpoint-tag component: bucket index +
+        the plan fingerprint, so checkpoints from different plans (or
+        different buckets of one plan) sharing a directory never
+        collide — the durable executor (simulator.run_sweep_planned)
+        appends this to the caller's CheckpointSpec tag."""
+        return f"b{k:02d}-{self.fingerprint[:8]}"
+
     def report(self) -> dict:
         """JSON-ready padding-waste report (per bucket + totals)."""
         return {

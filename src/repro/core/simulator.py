@@ -191,7 +191,9 @@ over scenarios pay compile each time — use ``run_sweep`` for sweeps.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 from dataclasses import dataclass
 from typing import NamedTuple, Sequence
 
@@ -199,9 +201,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import checkpoint as _ckpt
 from repro.core import constants as C
 from repro.core import gating
 from repro.core import workloads
+from repro.core.checkpoint import (CheckpointError,  # noqa: F401 — re-export
+                                   CheckpointSpec)
 from repro.core.topology import (FBSite, full_site_tag, pad_hull,
                                  site_tag)
 from repro.core.traffic import (TRAFFIC_SPECS, TrafficSpec,
@@ -234,8 +239,11 @@ CHUNK_TICKS = 10_000      # default scan chunk (accumulator fold period)
 #: results never alias faulted runs; v7: flow-level workload engine —
 #: flow knobs are Scenario leaves, results gain flow/FCT metrics, and
 #: cache meta carries the flow fingerprint so flow-free cached results
-#: never alias flow runs)
-SIM_SCHEMA_VERSION = 7
+#: never alias flow runs; v8: correlated failure domains — the
+#: per-plane hard-fault hazard ``plane_fail_prob`` is a Scenario leaf
+#: joined into the fault fingerprint, so plane-fault-free cached
+#: results never alias correlated-fault runs)
+SIM_SCHEMA_VERSION = 8
 
 #: number of times the sweep step has been traced (the one-compile probe)
 TRACE_COUNT = 0
@@ -371,6 +379,8 @@ class Scenario(NamedTuple):
     fault_prob: jax.Array       # f32 per-tick hard-fault hazard (1/MTBF)
     repair_ticks: jax.Array     # int32 hard-fault repair delay
     fault_fallback: jax.Array   # bool min-connectivity force-wake on/off
+    plane_fail_prob: jax.Array  # f32 per-tick correlated whole-plane
+    #                             hazard (one draw per laser comb)
     # flow-level workload engine (flow_mode=0 => the rate-based path
     # above, bit-identical; sweepable with zero new compile sites)
     flow_mode: jax.Array        # int32 0=rate-based, 1=flow engine
@@ -417,7 +427,7 @@ class SimState(NamedTuple):
 
 #: SimParams fields forming the fault model's cache/meta fingerprint
 FAULT_KNOBS = ("wake_fail_prob", "wake_jitter_frac", "link_mtbf_ticks",
-               "repair_ticks", "fault_fallback")
+               "repair_ticks", "fault_fallback", "plane_fail_prob")
 
 #: SimParams fields forming the flow engine's cache/meta fingerprint
 FLOW_KNOBS = ("flow_mode", "flow_arrival_rate", "flow_size_dist",
@@ -442,6 +452,10 @@ class SimParams:
     repair_ticks: int = 0          # hard-fault repair delay (>= 1 when
     #                                link_mtbf_ticks > 0)
     fault_fallback: bool = True    # min-connectivity force-wake
+    plane_fail_prob: float = 0.0   # per-tick correlated whole-plane
+    #                                hazard (shared laser comb dies ->
+    #                                every link it feeds faults at
+    #                                once); 0 disables plane faults
     # flow-level workload engine (default = the legacy rate-based path)
     flow_mode: int = 0             # 0=rate-based, 1=flow engine
     flow_arrival_rate: float = 0.0  # P(arrival event)/rack/tick; 0 =>
@@ -486,6 +500,12 @@ class SimParams:
         if self.link_mtbf_ticks > 0.0 and self.repair_ticks < 1:
             bad("repair_ticks must be >= 1 when hard faults are "
                 f"enabled (link_mtbf_ticks={self.link_mtbf_ticks})")
+        if not 0.0 <= self.plane_fail_prob < 1.0:
+            bad("plane_fail_prob must be in [0, 1), got "
+                f"{self.plane_fail_prob}")
+        if self.plane_fail_prob > 0.0 and self.repair_ticks < 1:
+            bad("repair_ticks must be >= 1 when plane faults are "
+                f"enabled (plane_fail_prob={self.plane_fail_prob})")
         if self.flow_mode not in (0, 1):
             bad(f"flow_mode must be 0 (rate-based) or 1 (flow "
                 f"engine), got {self.flow_mode}")
@@ -607,6 +627,7 @@ def _build_batch(runs: Sequence[tuple[SimParams, int]],
         repair_ticks=i32([p.repair_ticks for p in params]),
         fault_fallback=jnp.asarray([p.fault_fallback for p in params],
                                    bool),
+        plane_fail_prob=f32([p.plane_fail_prob for p in params]),
         flow_mode=i32([p.flow_mode for p in params]),
         # explicit rate wins; 0 derives the legacy generator's expected
         # spawn rate so the two modes offer comparable load
@@ -894,6 +915,29 @@ def make_sim_step(hull: FBSite):
 
         u_fr = fault_draws(k_fr, rack_uid)                  # (R, 2+16)
         u_fc = fault_draws(k_fc, csw_uid)                   # (NC, 2+16)
+
+        # correlated failure domains (plane_fail_prob): ONE hazard draw
+        # per shared laser comb, broadcast to every link it feeds, so a
+        # comb death takes the whole plane down in one tick. RSW tier:
+        # plane p of cluster k is fed by cluster-CSW (k, p) — all of
+        # cluster k's rack uplinks p share one draw. CSW tier: FC f's
+        # comb feeds csw uplink f site-wide — one draw per FC. New
+        # dedicated fold_in branches + the fixed MAX_FAULT_LINKS draw
+        # width keep every existing stream bit-untouched and the draws
+        # padding-invariant (cluster/plane ids are logical hull
+        # positions; real dims are prefix slices of the fixed block).
+        k_pr = jax.random.fold_in(k_u, 0x7F000005)
+        k_pc = jax.random.fold_in(k_u, 0x7F000006)
+        u_plane_cl = jax.vmap(
+            lambda k: jax.random.uniform(k, (MAX_FAULT_LINKS,)))(
+            jax.vmap(lambda i: jax.random.fold_in(k_pr, i))(
+                jnp.arange(NCL, dtype=jnp.int32)))          # (NCL, 16)
+        u_plane_r = jnp.broadcast_to(
+            u_plane_cl[:, None, :P], (NCL, RPC, P)).reshape(R, P)
+        u_plane_c = jnp.broadcast_to(
+            jax.random.uniform(k_pc, (MAX_FAULT_LINKS,))[None, :CUP],
+            (NC, CUP))
+
         rsw_ok = state.rsw_fault.timer == 0                 # (R, P)
         csw_ok = state.csw_fault.timer == 0                 # (NC, CUP)
         link_idx_p = jnp.arange(P)[None, :]
@@ -1292,11 +1336,13 @@ def make_sim_step(hull: FBSite):
         rsw_timer, rsw_new_f = gating.fault_arrivals(
             state.rsw_fault.timer, u_fr[:, 2:2 + P],
             state.rsw_gate.powered, rsw_link_real,
-            scen.fault_prob, scen.repair_ticks)
+            scen.fault_prob, scen.repair_ticks,
+            plane_u=u_plane_r, plane_fail_prob=scen.plane_fail_prob)
         csw_timer, csw_new_f = gating.fault_arrivals(
             state.csw_fault.timer, u_fc[:, 2:2 + CUP],
             state.csw_gate.powered, csw_link_real,
-            scen.fault_prob, scen.repair_ticks)
+            scen.fault_prob, scen.repair_ticks,
+            plane_u=u_plane_c, plane_fail_prob=scen.plane_fail_prob)
         acc["fault_drops"] += \
             jnp.sum(jnp.where(rsw_new_f[..., None], rsw_q, 0.0)) \
             + jnp.sum(jnp.where(csw_new_f, csw_up_q, 0.0))
@@ -1426,6 +1472,60 @@ class SweepValidationError(RuntimeError):
 #: each bucket; raising from it simulates a bucket failure
 #: (tests/test_faults.py uses this to pin the isolation contract)
 BUCKET_FAIL_HOOK = None
+
+#: preemption-injection seam for the durable executor: when set, called
+#: as ``CHUNK_HOOK(chunk_index)`` at the top of every chunk-loop
+#: iteration (before that chunk is dispatched); raising from it
+#: simulates a crash/preemption at an exact chunk boundary
+#: (tests/test_durability.py kills runs here and resumes them)
+CHUNK_HOOK = None
+
+#: monkeypatchable sleep used by the retry-backoff loop, so tests can
+#: pin the exact backoff sequence without waiting wall-clock time
+RETRY_SLEEP = time.sleep
+
+
+@dataclass(frozen=True)
+class BucketRetryPolicy:
+    """Retry/deadline policy for ``run_sweep_planned`` bucket failures.
+
+    The default reproduces the PR 6 contract exactly: ONE serial retry
+    on the conservative ``fold="host"`` path, immediately, with no
+    deadline. ``backoff_s(r)`` is the sleep before retry attempt ``r``
+    (1-based): ``min(backoff_base_s * backoff_mult**(r-1),
+    backoff_max_s)``, or 0 when ``backoff_base_s`` is 0 (no sleep).
+    ``deadline_s`` bounds each bucket's cumulative wall-clock time
+    across its attempts: once exceeded, remaining retries are abandoned
+    and the bucket degrades to a structured error entry. The deadline
+    never discards finished work — a bucket that completed (however
+    slowly) keeps its results; only further RETRIES are cut off.
+    """
+    max_retries: int = 1
+    backoff_base_s: float = 0.0
+    backoff_mult: float = 2.0
+    backoff_max_s: float = 60.0
+    deadline_s: float | None = None
+
+    def __post_init__(self):
+        def bad(msg):
+            raise ValueError(f"BucketRetryPolicy: {msg}")
+        if self.max_retries < 0:
+            bad(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_base_s < 0.0:
+            bad(f"backoff_base_s must be >= 0, got {self.backoff_base_s}")
+        if self.backoff_mult < 1.0:
+            bad(f"backoff_mult must be >= 1, got {self.backoff_mult}")
+        if self.backoff_max_s < 0.0:
+            bad(f"backoff_max_s must be >= 0, got {self.backoff_max_s}")
+        if self.deadline_s is not None and self.deadline_s < 0.0:
+            bad(f"deadline_s must be >= 0, got {self.deadline_s}")
+
+    def backoff_s(self, attempt: int) -> float:
+        """Sleep (seconds) before 1-based retry ``attempt``."""
+        if self.backoff_base_s <= 0.0:
+            return 0.0
+        return min(self.backoff_base_s * self.backoff_mult ** (attempt - 1),
+                   self.backoff_max_s)
 
 
 def _fold_dtype():
@@ -1645,35 +1745,39 @@ def _prepare_sweep_args(batch: ScenarioBatch, *, fold: str = "device",
     return scen, state, dev_fold, guard, tol
 
 
-def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
-                 chunk_ticks: int = CHUNK_TICKS, fold: str = "device",
-                 shard: bool | None = None, validate: bool = False,
-                 validate_tol: float | None = None) -> _PendingSweep:
-    """Dispatch a sweep's chunk programs without fetching results.
+def _dispatch_chunks(batch: ScenarioBatch, scen: Scenario, state: SimState,
+                     dev_fold, guard, tol, *, n_ticks: int, chunk: int,
+                     fold: str, validate: bool, n_real: int,
+                     start_chunk: int = 0,
+                     checkpoint: "CheckpointSpec | None" = None,
+                     plan_meta: dict | None = None) -> _PendingSweep:
+    """THE chunk loop, shared by ``_start_sweep`` (fresh runs, from
+    chunk 0) and ``resume_sweep`` (restored runs, from the checkpoint's
+    chunk index) so a resumed run replays byte-for-byte the same
+    dispatch sequence a fresh run would have executed from that
+    boundary. ``chunk`` is the EFFECTIVE chunk length
+    (``max(1, min(chunk_ticks, n_ticks))``) — a checkpoint records it
+    and resume reuses it, so the live-tick masks line up exactly.
 
-    With ``fold="device"`` (default) this returns as soon as the last
-    chunk is ENQUEUED — jax dispatch is asynchronous, so the caller can
-    trace/compile the next bucket while this one executes. The legacy
-    ``fold="host"`` path synchronizes at every chunk boundary (the
-    pre-PR-5 behaviour, kept for parity pinning).
+    Checkpointing (``checkpoint`` set; device fold only) snapshots the
+    full carry at every ``every_chunks`` boundary, DEFERRED BY ONE
+    CHUNK: the snapshot taken at boundary ``ci`` is written only after
+    chunk ``ci`` (the next one) has been dispatched, so the device
+    always has work enqueued while the host fetches and serializes —
+    cadenced snapshots throttle but never serialize the async pipeline.
+    The final boundary is never snapshotted (the run is finished, not
+    resumable, there).
     """
     global HOST_TRANSFER_COUNT
-    if fold not in ("device", "host"):
-        raise ValueError(f"fold must be 'device' or 'host', got {fold!r}")
-    if n_ticks < 1:
-        raise ValueError(f"n_ticks must be >= 1, got {n_ticks}")
-    hull = batch.hull
-    n_real = len(batch)
-    scen, state, dev_fold, guard, tol = _prepare_sweep_args(
-        batch, fold=fold, shard=shard, validate=validate,
-        validate_tol=validate_tol)
-
     runner = _sweep_runner()
+    hull = batch.hull
     acc64 = None
-    chunk = max(1, min(chunk_ticks, n_ticks))
-    done = 0
-    ci = 0
+    done = start_chunk * chunk
+    ci = start_chunk
+    pending_snap = None
     while done < n_ticks:
+        if CHUNK_HOOK is not None:
+            CHUNK_HOOK(ci)
         live = jnp.arange(chunk) < (n_ticks - done)
         state, dev_fold, guard = runner(
             hull, scen, state, chunk, live, dev_fold, guard,
@@ -1693,9 +1797,57 @@ def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
             state = state._replace(
                 acc=jax.tree.map(jnp.zeros_like, state.acc))
         done += chunk
+        if pending_snap is not None:
+            _snapshot_sweep(checkpoint, batch, *pending_snap,
+                            n_ticks=n_ticks, chunk=chunk,
+                            validate=validate, tol=tol, n_real=n_real,
+                            plan_meta=plan_meta)
+            pending_snap = None
+        if (checkpoint is not None and done < n_ticks
+                and ci % checkpoint.every_chunks == 0):
+            pending_snap = (ci, state, dev_fold, guard)
     return _PendingSweep(batch=batch, n_ticks=n_ticks, fold=dev_fold,
                          acc64=acc64, state=state, n_real=n_real,
                          guard=guard)
+
+
+def _start_sweep(batch: ScenarioBatch, n_ticks: int, *,
+                 chunk_ticks: int = CHUNK_TICKS, fold: str = "device",
+                 shard: bool | None = None, validate: bool = False,
+                 validate_tol: float | None = None,
+                 checkpoint: "CheckpointSpec | None" = None,
+                 plan_meta: dict | None = None) -> _PendingSweep:
+    """Dispatch a sweep's chunk programs without fetching results.
+
+    With ``fold="device"`` (default) this returns as soon as the last
+    chunk is ENQUEUED — jax dispatch is asynchronous, so the caller can
+    trace/compile the next bucket while this one executes. The legacy
+    ``fold="host"`` path synchronizes at every chunk boundary (the
+    pre-PR-5 behaviour, kept for parity pinning).
+
+    ``checkpoint`` (a :class:`CheckpointSpec`) snapshots the full
+    per-scenario carry at the spec's chunk cadence — device fold only:
+    the snapshot IS the device fold buffer plus the SimState carry, and
+    the host path already synchronizes per chunk, so checkpointing it
+    would pin a second fetch discipline for no benefit.
+    """
+    if fold not in ("device", "host"):
+        raise ValueError(f"fold must be 'device' or 'host', got {fold!r}")
+    if n_ticks < 1:
+        raise ValueError(f"n_ticks must be >= 1, got {n_ticks}")
+    if checkpoint is not None and fold != "device":
+        raise ValueError(
+            "checkpointing requires the device-resident fold "
+            f"(fold='device'); got fold={fold!r}")
+    n_real = len(batch)
+    scen, state, dev_fold, guard, tol = _prepare_sweep_args(
+        batch, fold=fold, shard=shard, validate=validate,
+        validate_tol=validate_tol)
+    return _dispatch_chunks(
+        batch, scen, state, dev_fold, guard, tol, n_ticks=n_ticks,
+        chunk=max(1, min(chunk_ticks, n_ticks)), fold=fold,
+        validate=validate, n_real=n_real, checkpoint=checkpoint,
+        plan_meta=plan_meta)
 
 
 def _finish_sweep(p: _PendingSweep, return_state: bool = False):
@@ -1742,11 +1894,212 @@ def _finish_sweep(p: _PendingSweep, return_state: bool = False):
     return res
 
 
+def _snapshot_sweep(spec: CheckpointSpec, batch: ScenarioBatch,
+                    ci: int, state: SimState, dev_fold, guard, *,
+                    n_ticks: int, chunk: int, validate: bool, tol,
+                    n_real: int, plan_meta: dict | None = None):
+    """Write one checkpoint of a running sweep's full carry.
+
+    THE registered checkpoint fetch (an RL003 blessed transfer): ONE
+    explicit ``jax.device_get`` of the whole carry — every SimState
+    leaf, the device Kahan fold ``(sum, comp)`` buffers, the validate
+    guard, and the scenario batch — per cadence boundary, counted by
+    ``HOST_TRANSFER_COUNT`` (so a checkpointed run's pin is exactly
+    ``1 + n_checkpoints``). Devices-multiple pad rows (copies of
+    scenario 0, bit-inert) are stripped before writing; resume re-pads
+    for whatever device layout it finds, which is exact because a pad
+    row is a FULL copy of row 0 (same scenario, same seed, same carry)
+    and scenarios are independent vmap lanes.
+    """
+    global HOST_TRANSFER_COUNT
+    scen_h, state_h, fold_h, guard_h = jax.device_get(
+        (batch.scen, state, dev_fold, guard))
+    HOST_TRANSFER_COUNT += 1
+    state_h = jax.tree.map(lambda x: np.asarray(x)[:n_real], state_h)
+    arrays = {}
+    for name, leaf in zip(Scenario._fields, scen_h):
+        arrays[f"scen/{name}"] = np.asarray(leaf)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state_h)[0]:
+        arrays["state" + jax.tree_util.keystr(path)] = np.asarray(leaf)
+    fsum, fcomp = fold_h
+    for k, v in fsum.items():
+        arrays[f"fold_sum/{k}"] = np.asarray(v)[:n_real]
+    for k, v in fcomp.items():
+        arrays[f"fold_comp/{k}"] = np.asarray(v)[:n_real]
+    if guard_h is not None:
+        arrays["guard"] = np.asarray(guard_h)[:n_real]
+    meta = {
+        "sim_schema": SIM_SCHEMA_VERSION,
+        "fault_knobs": list(FAULT_KNOBS),
+        "flow_knobs": list(FLOW_KNOBS),
+        "scenario_fields": list(Scenario._fields),
+        # the fold dtype pins the JAX_ENABLE_X64 mode: float64 iff x64
+        "fold_dtype": jnp.dtype(_fold_dtype()).name,
+        "n_ticks": int(n_ticks), "chunk_ticks": int(chunk),
+        "chunk_index": int(ci), "n_real": int(n_real),
+        "validate": bool(validate),
+        "validate_tol": float(tol) if tol is not None else None,
+        "hull": dataclasses.asdict(batch.hull),
+        "sites": [dataclasses.asdict(s) for s in batch.sites],
+        "names": list(batch.names), "labels": list(batch.labels),
+        "gating": [bool(g) for g in batch.gating],
+        "seeds": [int(s) for s in batch.seeds],
+        "plan": plan_meta, "tag": spec.tag,
+    }
+    path = _ckpt.write_checkpoint(spec.path_for(ci), meta, arrays)
+    _ckpt.prune(spec)
+    return path
+
+
+def resume_sweep(path, *, return_state: bool = False,
+                 shard: bool | None = None,
+                 checkpoint: "CheckpointSpec | None" = None):
+    """Restart an interrupted sweep from a checkpoint file and run it
+    to completion — BIT-identically to the uninterrupted run.
+
+    The checkpoint carries the full per-scenario carry at a chunk
+    boundary plus the run geometry, so the remaining chunks replay
+    exactly the dispatch sequence the original run would have executed
+    (same effective chunk length, same live-tick masks, same per-tick
+    ``fold_in`` PRNG streams — nothing about the randomness depends on
+    wall-clock history). Works across device layouts: the saved rows
+    are re-padded/re-sharded for THIS process's devices (pad rows are
+    bit-inert copies of row 0), so a run checkpointed on one device may
+    resume on four, and vice versa. The x64 mode, however, must match:
+    every restored dtype (fold buffers above all) pins it, and a
+    mismatch fails fast.
+
+    Raises :class:`CheckpointError` (reason naming the first mismatch:
+    "format"/"checksum" from the file layer, "sim_schema",
+    "fingerprint", "scenario_fields", "x64_mode", "state_schema" from
+    the engine-compatibility checks) rather than resuming from a
+    checkpoint this engine cannot reproduce. Pass ``checkpoint`` (a
+    :class:`CheckpointSpec`) to KEEP checkpointing the resumed run at
+    the same absolute chunk cadence.
+    """
+    meta, arrays = _ckpt.read_checkpoint(path)
+
+    def reject(reason, detail):
+        raise CheckpointError(reason, f"{path}: {detail}")
+
+    if meta.get("sim_schema") != SIM_SCHEMA_VERSION:
+        reject("sim_schema",
+               f"written at SIM_SCHEMA_VERSION={meta.get('sim_schema')!r}"
+               f", this engine is {SIM_SCHEMA_VERSION}")
+    if meta.get("fault_knobs") != list(FAULT_KNOBS) \
+            or meta.get("flow_knobs") != list(FLOW_KNOBS):
+        reject("fingerprint",
+               f"fault/flow knob inventory {meta.get('fault_knobs')!r}/"
+               f"{meta.get('flow_knobs')!r} != this engine's "
+               f"{list(FAULT_KNOBS)!r}/{list(FLOW_KNOBS)!r}")
+    if meta.get("scenario_fields") != list(Scenario._fields):
+        reject("scenario_fields",
+               f"scenario leaves {meta.get('scenario_fields')!r} != "
+               f"this engine's {list(Scenario._fields)!r}")
+    fold_dtype = jnp.dtype(_fold_dtype()).name
+    if meta.get("fold_dtype") != fold_dtype:
+        reject("x64_mode",
+               f"written with fold dtype {meta.get('fold_dtype')!r} "
+               f"(JAX_ENABLE_X64={meta.get('fold_dtype') == 'float64'}),"
+               f" this process folds in {fold_dtype!r}")
+    missing_scen = [f for f in Scenario._fields
+                    if f"scen/{f}" not in arrays]
+    if missing_scen:
+        reject("scenario_fields",
+               f"scenario leaf arrays missing: {missing_scen}")
+
+    hull = FBSite(**meta["hull"])
+    scen = Scenario(**{f: jnp.asarray(arrays[f"scen/{f}"])
+                       for f in Scenario._fields})
+    batch = ScenarioBatch(
+        scen=scen, hull=hull,
+        sites=tuple(FBSite(**d) for d in meta["sites"]),
+        names=tuple(meta["names"]), labels=tuple(meta["labels"]),
+        gating=tuple(bool(g) for g in meta["gating"]),
+        seeds=tuple(int(s) for s in meta["seeds"]))
+    n_real = int(meta["n_real"])
+
+    # rebuild the state pytree: shape/dtype template via eval_shape (no
+    # compute), then place the saved leaves into it — any drift in the
+    # carry inventory (new/renamed/re-shaped SimState leaves, an x64
+    # dtype flip the fold check missed) is a structured rejection here
+    if jax.dtypes.canonicalize_dtype(np.int64) == jnp.int64:
+        seeds = jnp.asarray(batch.seeds, jnp.int64)
+    else:
+        seeds = jnp.asarray([s & 0xFFFFFFFF for s in batch.seeds],
+                            jnp.uint32)
+    tmpl = jax.eval_shape(
+        jax.vmap(lambda sc, k: _init_state(hull, sc, k)),
+        scen, jax.eval_shape(jax.vmap(jax.random.PRNGKey), seeds))
+    tmpl_leaves, treedef = jax.tree_util.tree_flatten_with_path(tmpl)
+    state_leaves = []
+    for p_, leaf in tmpl_leaves:
+        name = "state" + jax.tree_util.keystr(p_)
+        if name not in arrays:
+            reject("state_schema", f"carry array {name!r} missing")
+        a = arrays[name]
+        if tuple(a.shape) != tuple(leaf.shape) \
+                or np.dtype(a.dtype) != np.dtype(leaf.dtype):
+            reject("state_schema",
+                   f"carry array {name!r} is {a.dtype}{a.shape}, this "
+                   f"engine expects {leaf.dtype}{tuple(leaf.shape)}")
+        state_leaves.append(jnp.asarray(a))
+    state = jax.tree_util.tree_unflatten(treedef, state_leaves)
+
+    fdt = _fold_dtype()
+    fsum, fcomp = {}, {}
+    for k in tmpl.acc:
+        for d, store in (("fold_sum", fsum), ("fold_comp", fcomp)):
+            name = f"{d}/{k}"
+            if name not in arrays:
+                reject("state_schema", f"fold buffer {name!r} missing")
+            store[k] = jnp.asarray(arrays[name], fdt)
+    dev_fold = (fsum, fcomp)
+
+    validate = bool(meta["validate"])
+    guard = tol = None
+    if validate:
+        if "guard" not in arrays:
+            reject("state_schema", "validate guard array missing")
+        guard = jnp.asarray(arrays["guard"], jnp.int32)
+        tol = jnp.asarray(meta["validate_tol"], jnp.float32)
+
+    # re-pad + re-shard for THIS process's device layout (mirrors
+    # _prepare_sweep_args; pad rows are full copies of row 0, bit-inert)
+    if _should_shard(n_real, shard):
+        n_dev = jax.local_device_count()
+        sharding = _scen_sharding()
+        pad = (-n_real) % n_dev
+        if pad:
+            def _pad0(x):
+                return jnp.concatenate(
+                    [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])
+            scen = jax.tree.map(_pad0, scen)
+            state = jax.tree.map(_pad0, state)
+            dev_fold = jax.tree.map(_pad0, dev_fold)
+            if guard is not None:
+                guard = _pad0(guard)
+        scen = jax.device_put(scen, sharding)
+        state = jax.device_put(state, sharding)
+        dev_fold = jax.device_put(dev_fold, sharding)
+        if guard is not None:
+            guard = jax.device_put(guard, sharding)
+
+    pend = _dispatch_chunks(
+        batch, scen, state, dev_fold, guard, tol,
+        n_ticks=int(meta["n_ticks"]), chunk=int(meta["chunk_ticks"]),
+        fold="device", validate=validate, n_real=n_real,
+        start_chunk=int(meta["chunk_index"]), checkpoint=checkpoint,
+        plan_meta=meta.get("plan"))
+    return _finish_sweep(pend, return_state=return_state)
+
+
 def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
               chunk_ticks: int = CHUNK_TICKS, return_state: bool = False,
               fold: str = "device", shard: bool | None = None,
               validate: bool = False,
-              validate_tol: float | None = None):
+              validate_tol: float | None = None,
+              checkpoint: "CheckpointSpec | None" = None):
     """Run every scenario of ``batch`` for n_ticks us in one vmapped,
     chunk-scanned program; returns one metrics dict per scenario (same
     schema as ``run_sim``, plus the scenario ``label``). With
@@ -1776,11 +2129,20 @@ def run_sweep(batch: ScenarioBatch, n_ticks: int, *,
     guard is a (B,) int32 riding the fold transfer). Validation changes
     the compiled program (one extra trace per hull/shape) but never the
     simulated dynamics: metric values are identical with it on or off.
+
+    ``checkpoint`` (a :class:`CheckpointSpec`; device fold only)
+    snapshots the full carry at the spec's chunk cadence so an
+    interrupted run restarts from ``resume_sweep(path)`` bit-identically
+    (see the durability contract in ROADMAP.md). Checkpointing only
+    OBSERVES the run — the dispatched programs and their results are
+    bit-identical with it on or off; each snapshot adds one blessed
+    host transfer (``HOST_TRANSFER_COUNT`` becomes
+    ``1 + n_checkpoints``).
     """
     return _finish_sweep(
         _start_sweep(batch, n_ticks, chunk_ticks=chunk_ticks, fold=fold,
                      shard=shard, validate=validate,
-                     validate_tol=validate_tol),
+                     validate_tol=validate_tol, checkpoint=checkpoint),
         return_state=return_state)
 
 
@@ -1790,7 +2152,9 @@ def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
                       return_plan: bool = False, fold: str = "device",
                       shard: bool | None = None, pipeline: bool = True,
                       validate: bool = False,
-                      validate_tol: float | None = None):
+                      validate_tol: float | None = None,
+                      retry: "BucketRetryPolicy | None" = None,
+                      checkpoint: "CheckpointSpec | None" = None):
     """Run a heterogeneous-site sweep through the hull-bucketing planner
     (core/planner.py): the (SimParams, seed) pairs are partitioned into
     <= ``max_compiles`` hull buckets by estimated padded cost, each
@@ -1821,64 +2185,154 @@ def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
     Bucket failures are ISOLATED: an exception while dispatching or
     fetching one bucket (a poisoned scenario tripping ``validate``
     guards, a compile failure, an OOM) never takes down the other
-    buckets. The failed bucket is retried ONCE, strictly serially and
-    on the legacy ``fold="host"`` path (the most conservative execution
-    mode: per-chunk synchronization, no device-resident fold buffer);
-    if the retry also fails, that bucket's runs come back as structured
-    error entries — ``{"label", "plan_bucket", "plan_hull", "error":
-    {"type", "message", "stage", "retried"}}`` with ``stage`` the phase
-    of the ORIGINAL failure ("dispatch" or "fetch") — in caller order
-    alongside the successful buckets' metric dicts, so one bad scenario
-    degrades exactly its own bucket and nothing else. All remaining
-    pending buckets are drained even when a fetch raises, so no device
-    buffers are left dangling.
+    buckets. The failed bucket is retried per the ``retry`` policy
+    (:class:`BucketRetryPolicy`; default = the original contract, ONE
+    immediate retry, no deadline), each retry strictly serial on the
+    legacy ``fold="host"`` path (the most conservative execution mode:
+    per-chunk synchronization, no device-resident fold buffer), with
+    the policy's exponential backoff between attempts and its
+    ``deadline_s`` bounding each bucket's cumulative wall-clock time —
+    once a bucket has spent its deadline, remaining retries are
+    abandoned (finished work is never discarded). On exhaustion that
+    bucket's runs come back as structured error entries — ``{"label",
+    "plan_bucket", "plan_hull", "error": {"type", "message", "stage",
+    "retried"}}`` with ``stage`` the phase of the ORIGINAL failure
+    ("dispatch" or "fetch") and ``message`` the final attempt's — in
+    caller order alongside the successful buckets' metric dicts, so one
+    bad scenario degrades exactly its own bucket and nothing else. All
+    remaining pending buckets are drained even when a fetch raises, so
+    no device buffers are left dangling.
+
+    ``checkpoint`` checkpoints every bucket under a per-bucket tag
+    (``<tag>-<plan.bucket_tag(k)>``, collision-free across plans), and
+    guarantees graceful partial-result degradation: an exhausted bucket
+    additionally carries ``error["checkpoint"]`` — the path of its
+    newest cadence snapshot, or a freshly written chunk-0 snapshot of
+    its initial carry when it never reached a boundary — so a failed
+    planned sweep always leaves every other bucket's results PLUS a
+    ``resume_sweep``-able artifact for the failed one (None only if
+    even the salvage write failed).
     """
     # local import: the planner is deliberately jax-free and usable
     # standalone; only the execution path needs it
     from repro.core import planner
 
+    if checkpoint is not None and fold != "device":
+        raise ValueError(
+            "checkpointing requires the device-resident fold "
+            f"(fold='device'); got fold={fold!r}")
     runs = list(runs)
     plan = planner.plan_sites([p.site for p, _ in runs], max_compiles)
     order = plan.dispatch_order if pipeline \
         else tuple(range(len(plan.buckets)))
+    policy = retry if retry is not None else BucketRetryPolicy()
     pending: dict[int, _PendingSweep] = {}
     fetched: dict[int, list] = {}
     errors: dict[int, dict] = {}
+    elapsed: dict[int, float] = {}
 
     def hook(k, phase):
         if BUCKET_FAIL_HOOK is not None:
             BUCKET_FAIL_HOOK(k, phase)
 
-    def retry(k, stage, exc):
-        # one serial retry on the most conservative path; on a second
-        # failure record a structured error for the bucket (stage = the
-        # ORIGINAL failure's phase, message = the final failure's)
+    def timed(k, fn):
+        # per-bucket wall-clock ledger: cumulative across the bucket's
+        # dispatch, fetch and retry attempts; the policy's deadline_s
+        # is checked against it before each retry
+        t0 = time.monotonic()
         try:
-            hook(k, "retry")
+            return fn()
+        finally:
+            elapsed[k] = elapsed.get(k, 0.0) + (time.monotonic() - t0)
+
+    def bucket_spec(k):
+        if checkpoint is None:
+            return None
+        return dataclasses.replace(
+            checkpoint, tag=f"{checkpoint.tag}-{plan.bucket_tag(k)}")
+
+    def bucket_plan_meta(k):
+        return {"fingerprint": plan.fingerprint, "bucket": k,
+                "hull": full_site_tag(plan.buckets[k].hull)}
+
+    def salvage_checkpoint(k, spec_k):
+        # a resumable artifact for the exhausted bucket: its newest
+        # cadence snapshot if it reached a boundary, else a fresh
+        # chunk-0 snapshot of its INITIAL carry (resuming that replays
+        # the whole bucket). Best-effort: None if even this fails.
+        existing = _ckpt.latest_checkpoint(spec_k.directory, spec_k.tag)
+        if existing is not None:
+            return str(existing)
+        try:
             batch = make_multi_site_batch(
                 [runs[i] for i in plan.buckets[k].indices])
-            fetched[k] = _finish_sweep(_start_sweep(
-                batch, n_ticks, chunk_ticks=chunk_ticks, fold="host",
-                shard=shard, validate=validate,
-                validate_tol=validate_tol))
-        except Exception as exc2:          # noqa: BLE001 — isolation
-            errors[k] = {"type": type(exc2).__name__,
-                         "message": str(exc2), "stage": stage,
-                         "retried": True}
+            scen, state, dev_fold, guard, tol = _prepare_sweep_args(
+                batch, fold="device", shard=shard, validate=validate,
+                validate_tol=validate_tol)
+            return str(_snapshot_sweep(
+                spec_k, batch, 0, state, dev_fold, guard,
+                n_ticks=n_ticks,
+                chunk=max(1, min(chunk_ticks, n_ticks)),
+                validate=validate, tol=tol, n_real=len(batch),
+                plan_meta=bucket_plan_meta(k)))
+        except Exception:                  # noqa: BLE001 — best effort
+            return None
+
+    def retry_bucket(k, stage, exc):
+        # bounded retries on the most conservative path; on exhaustion
+        # record a structured error for the bucket (stage = the
+        # ORIGINAL failure's phase, message = the final failure's)
+        last = exc
+        retried = False
+        for attempt in range(1, policy.max_retries + 1):
+            if (policy.deadline_s is not None
+                    and elapsed.get(k, 0.0) >= policy.deadline_s):
+                break
+            delay = policy.backoff_s(attempt)
+            if delay > 0.0:
+                RETRY_SLEEP(delay)
+            retried = True
+
+            def one_retry():
+                hook(k, "retry")
+                batch = make_multi_site_batch(
+                    [runs[i] for i in plan.buckets[k].indices])
+                return _finish_sweep(_start_sweep(
+                    batch, n_ticks, chunk_ticks=chunk_ticks,
+                    fold="host", shard=shard, validate=validate,
+                    validate_tol=validate_tol))
+
+            try:
+                fetched[k] = timed(k, one_retry)
+                return
+            except Exception as exc2:      # noqa: BLE001 — isolation
+                last = exc2
+        errors[k] = {"type": type(last).__name__, "message": str(last),
+                     "stage": stage, "retried": retried}
+        spec_k = bucket_spec(k)
+        if spec_k is not None:
+            errors[k]["checkpoint"] = salvage_checkpoint(k, spec_k)
 
     try:
         for k in order:
             bucket = plan.buckets[k]
-            try:
+
+            def dispatch(k=k, bucket=bucket):
                 hook(k, "dispatch")
                 batch = make_multi_site_batch(
                     [runs[i] for i in bucket.indices])
-                ps = _start_sweep(batch, n_ticks,
-                                  chunk_ticks=chunk_ticks, fold=fold,
-                                  shard=shard, validate=validate,
-                                  validate_tol=validate_tol)
+                return _start_sweep(
+                    batch, n_ticks, chunk_ticks=chunk_ticks, fold=fold,
+                    shard=shard, validate=validate,
+                    validate_tol=validate_tol,
+                    checkpoint=bucket_spec(k),
+                    plan_meta=bucket_plan_meta(k)
+                    if checkpoint is not None else None)
+
+            try:
+                ps = timed(k, dispatch)
             except Exception as exc:       # noqa: BLE001 — isolation
-                retry(k, "dispatch", exc)
+                retry_bucket(k, "dispatch", exc)
                 continue
             if pipeline:
                 pending[k] = ps
@@ -1888,16 +2342,20 @@ def run_sweep_planned(runs: Sequence[tuple[SimParams, int]], n_ticks: int,
                 # free now — this IS the advertised one-bucket-resident
                 # memory mode
                 try:
-                    hook(k, "fetch")
-                    fetched[k] = _finish_sweep(ps)
+                    def fetch(ps=ps, k=k):
+                        hook(k, "fetch")
+                        return _finish_sweep(ps)
+                    fetched[k] = timed(k, fetch)
                 except Exception as exc:   # noqa: BLE001 — isolation
-                    retry(k, "fetch", exc)
+                    retry_bucket(k, "fetch", exc)
         for k in (k for k in order if k in pending):
             try:
-                hook(k, "fetch")
-                fetched[k] = _finish_sweep(pending.pop(k))
+                def fetch(k=k):
+                    hook(k, "fetch")
+                    return _finish_sweep(pending.pop(k))
+                fetched[k] = timed(k, fetch)
             except Exception as exc:       # noqa: BLE001 — isolation
-                retry(k, "fetch", exc)
+                retry_bucket(k, "fetch", exc)
     finally:
         # a raising fetch (pre-isolation this propagated) must never
         # leave later buckets' device state/fold buffers referenced

@@ -396,12 +396,12 @@ def test_shipped_registry_round_trips():
     assert {e["kind"] for e in cfg.raw["compile_site"]} == \
         {"jit", "scan", "pallas_call"}
     assert cfg.blessed("src/repro/core/simulator.py") == \
-        {"_start_sweep", "_finish_sweep"}
+        {"_dispatch_chunks", "_finish_sweep", "_snapshot_sweep"}
     sc = cfg.raw["scenario_contract"]
-    assert sc["schema_version"] == 7
+    assert sc["schema_version"] == 8
     assert list(sc["fingerprint_params"]) == [
         "wake_fail_prob", "wake_jitter_frac", "link_mtbf_ticks",
-        "repair_ticks", "fault_fallback"]
+        "repair_ticks", "fault_fallback", "plane_fail_prob"]
     assert list(sc["flow_fingerprint_params"]) == [
         "flow_mode", "flow_arrival_rate", "flow_size_dist",
         "incast_degree", "flow_table_cap"]

@@ -1,7 +1,8 @@
 """Optical fault-injection subsystem: knob validation, zero-rate
 inertness, conservation with the fault-drop bin, the connectivity-
 preserving fallback contract (hypothesis property + full-sim audit),
-the fault-tolerant planned executor, and the opt-in validate mode."""
+correlated whole-plane failure domains (plane_fail_prob), the
+fault-tolerant planned executor, and the opt-in validate mode."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -40,6 +41,9 @@ def fault_results():
         "fallback": _params(**HARSH),
         "nofb": _params(**HARSH, fault_fallback=False),
         "base": _params(**HARSH, gating_enabled=False),
+        # plane faults ONLY (no per-link MTBF): any link fault observed
+        # in this row came through the correlated-plane mechanism
+        "plane": _params(plane_fail_prob=5e-3, repair_ticks=200),
     }
     batch = S.make_batch([(p, 8 + i) for i, p in enumerate(rows.values())])
     res, state = S.run_sweep(batch, TICKS, chunk_ticks=500,
@@ -60,6 +64,9 @@ def fault_results():
     (dict(link_mtbf_ticks=0.5), "link_mtbf_ticks"),
     (dict(repair_ticks=-1), "repair_ticks"),
     (dict(link_mtbf_ticks=100.0, repair_ticks=0), "repair_ticks"),
+    (dict(plane_fail_prob=1.0), "plane_fail_prob"),
+    (dict(plane_fail_prob=-0.1), "plane_fail_prob"),
+    (dict(plane_fail_prob=0.001), "repair_ticks"),
 ])
 def test_simparams_rejects_bad_knobs(kw, match):
     with pytest.raises(ValueError, match=match):
@@ -133,6 +140,57 @@ def test_fault_mechanisms_actually_fire(fault_results):
     assert harsh["wake_retries"] + harsh["forced_wakes"] > 0.0
     assert harsh["delivered_frac"] > 0.5  # degraded but not collapsed
     assert res["nofb"]["wake_retries"] > 0.0
+
+
+# ---- correlated failure domains (plane_fail_prob) -----------------------
+
+def test_fault_arrivals_whole_plane_correlation():
+    """A plane draw under the hazard takes EVERY healthy powered real
+    link of that plane down in the same tick; planes whose draw clears
+    it lose none (the per-link stream is silenced here: u == 1 never
+    fires under strict <)."""
+    Ssw, L = 3, 4
+    timer = jnp.zeros((Ssw, L), jnp.int32)
+    ones = jnp.ones((Ssw, L), bool)
+    u = jnp.ones((Ssw, L), jnp.float32)
+    plane_u = jnp.broadcast_to(
+        jnp.asarray([[0.0], [0.009], [0.5]], jnp.float32), (Ssw, L))
+    timer2, fault = gating.fault_arrivals(
+        timer, u, ones, ones, 0.0, 7, plane_u=plane_u,
+        plane_fail_prob=0.01)
+    np.testing.assert_array_equal(
+        np.asarray(fault),
+        np.asarray([[True] * L, [True] * L, [False] * L]))
+    assert np.all(np.asarray(timer2)[:2] == 7)
+    assert np.all(np.asarray(timer2)[2] == 0)
+
+
+def test_fault_arrivals_plane_zero_rate_bit_inert():
+    """plane_fail_prob == 0 is STRUCTURALLY inert: even an all-zero
+    plane_u field (the worst case for an epsilon-based gate — uniforms
+    are >= 0 and the compare is strict <) yields bit-identical outputs
+    to the no-plane-argument call."""
+    rng = np.random.default_rng(7)
+    timer = jnp.asarray(rng.integers(0, 3, (4, 4)), jnp.int32)
+    u = jnp.asarray(rng.random((4, 4)), jnp.float32)
+    powered = jnp.asarray(rng.random((4, 4)) < 0.7)
+    real = jnp.asarray(rng.random((4, 4)) < 0.9)
+    plane_u = jnp.zeros((4, 4), jnp.float32)
+    a = gating.fault_arrivals(timer, u, powered, real, 0.05, 9)
+    b = gating.fault_arrivals(timer, u, powered, real, 0.05, 9,
+                              plane_u=plane_u, plane_fail_prob=0.0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_plane_faults_fire_in_full_sim(fault_results):
+    """With per-link MTBF OFF, every observed link fault came through
+    the correlated-plane mechanism — and the fabric degrades rather
+    than collapses."""
+    res, _ = fault_results
+    plane = res["plane"]
+    assert plane["link_fault_frac"] > 0.0
+    assert plane["delivered_frac"] > 0.5
 
 
 # ---- connectivity contract ----------------------------------------------
